@@ -1,0 +1,74 @@
+"""Paper Figs. 7/8/9: total time + memory of the three TDA algorithms with
+{GALE, ACTOPO, TopoCluster, Explicit Triangulation} across datasets."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.algorithms.critical_points import critical_points
+from repro.algorithms.discrete_gradient import discrete_gradient
+from repro.algorithms.morse_smale import morse_smale
+
+from . import common
+
+CP_RELS = ("VV", "VT")                       # paper: 2 queues
+DG_RELS = ("VE", "VF", "VT")                 # paper: 3 queues
+MS_RELS = ("VE", "VF", "VT", "FT")           # + FT for separatrices
+
+STRUCTURES = ("gale", "actopo", "topocluster", "explicit")
+
+
+def _run_algo(algo: str, ds, pre, rank):
+    if algo == "critical_points":
+        return critical_points(ds, pre, rank, batch_segments=16)
+    if algo == "discrete_gradient":
+        return discrete_gradient(ds, pre, rank, batch_segments=16)
+    if algo == "morse_smale":
+        g = discrete_gradient(ds, pre, rank, batch_segments=16)
+        return morse_smale(ds, pre, g)
+    raise KeyError(algo)
+
+
+def bench(algo: str, relations, datasets, structures=STRUCTURES,
+          capacity=64) -> List[str]:
+    rows = []
+    ref = {}
+    for name in datasets:
+        sm, pre, rank, t_pre = common.prepare(name, relations, capacity)
+        for kind in structures:
+            t0 = time.perf_counter()
+            ds = common.make_ds(kind, pre, relations)
+            t_init = time.perf_counter() - t0
+            t_algo, out = common.timed(_run_algo, algo, ds, pre, rank)
+            mem = common.ds_memory_bytes(ds)
+            # correctness cross-check between structures
+            sig = _signature(algo, out)
+            ref.setdefault(name, sig)
+            ok = "ok" if sig == ref[name] else "MISMATCH"
+            rows.append(common.row(
+                f"{algo}/{name}/{kind}", t_init + t_algo,
+                f"init_s={t_init + t_pre:.3f};algo_s={t_algo:.3f};"
+                f"mem_mb={mem / 1e6:.1f};{ok}"))
+    return rows
+
+
+def _signature(algo, out):
+    if algo == "critical_points":
+        return tuple(sorted(out[1].items()))
+    if algo == "discrete_gradient":
+        return tuple(sorted(out.counts().items()))
+    return tuple(sorted(out.counts().items()))
+
+
+def run(quick: bool = True) -> List[str]:
+    data = common.QUICK_DATASETS if quick else common.FULL_DATASETS
+    structs = ("gale", "actopo", "explicit") if quick else STRUCTURES
+    rows = []
+    # critical points keeps all four structures (incl. TopoCluster) so the
+    # localized-vs-localized ordering is visible even in quick mode
+    rows += bench("critical_points", CP_RELS, data, STRUCTURES)
+    rows += bench("discrete_gradient", DG_RELS, data, structs)
+    rows += bench("morse_smale", MS_RELS,
+                  data[:2] if quick else data, structs)
+    return rows

@@ -1,0 +1,72 @@
+"""Paper Appendix A: GPU kernel parameter study, mapped to TPU knobs.
+
+  t_s (threads per segment)  -> Pallas block shapes (block_x, block_y):
+       how finely one segment's relation tile is partitioned.
+  t_b x n_b (block dim)      -> segments per batched launch (lookahead x
+       batch_max): how much work one leader launch covers.
+
+Block-shape timing on this CPU container uses the interpreter (structural
+check only — VMEM tiling benefits require the real MXU); the launch-size
+sweep uses the XLA backend and is meaningful wall-clock."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core.engine import RelationEngine
+from repro.kernels import ops
+
+from . import common
+
+RELATIONS = ("VV", "VT", "VE", "VF", "ET", "EF", "FT")
+
+
+def run(quick: bool = True) -> List[str]:
+    rows = []
+    sm, pre, rank, _ = common.prepare("engine" if quick else "fish",
+                                      RELATIONS)
+    ns = sm.n_segments
+
+    # -- segments-per-launch sweep (t_b*n_b analogue, paper Fig. 12/13) ----
+    n_req = min(256, ns)
+    for batch in (1, 4, 16, 64):
+        eng = RelationEngine(pre, RELATIONS, backend="xla", lookahead=0,
+                             batch_max=batch, cache_segments=2 * batch + 8)
+        t0 = time.perf_counter()
+        for s0 in range(0, n_req, batch):
+            eng.get_batch("VV", list(range(s0, min(s0 + batch, n_req))))
+            eng.cache._store.clear()
+        t = time.perf_counter() - t0
+        rows.append(common.row(
+            f"kernel_params/segments_per_launch/{batch}", t / n_req,
+            f"launches={eng.stats.kernel_launches};total_s={t:.3f}"))
+
+    # -- per-relation extraction throughput (paper Fig. 11 analogue) --------
+    segs = list(range(min(64, ns)))
+    for R in RELATIONS:
+        eng = RelationEngine(pre, RELATIONS, backend="xla", lookahead=0,
+                             batch_max=64, cache_segments=4)
+        t0 = time.perf_counter()
+        eng.get_batch(R, segs)
+        t = time.perf_counter() - t0
+        rows.append(common.row(
+            f"kernel_params/relation/{R}", t / len(segs),
+            f"segments={len(segs)};total_s={t:.3f}"))
+
+    # -- Pallas block-shape sweep (t_s analogue), interpret mode ------------
+    t = pre.tables
+    B = 4
+    tabT = np.asarray(t.T_local[:B])
+    for blk in ((128, 128), (256, 256), (128, 512)):
+        t0 = time.perf_counter()
+        C = ops.counts_meet(tabT, tabT, t.NV, backend="pallas_interpret",
+                            block_x=blk[0], block_y=blk[1])
+        C.block_until_ready()
+        dt = time.perf_counter() - t0
+        rows.append(common.row(
+            f"kernel_params/pallas_block/{blk[0]}x{blk[1]}", dt / B,
+            f"interpret=1;NT={t.NT};NV={t.NV}"))
+    return rows

@@ -1,0 +1,42 @@
+"""Memory crossover (paper Figs. 7-9 memory bars): localized tables are a
+flat cost independent of how many relation types the algorithm needs, while
+Explicit Triangulation's storage grows with every additional relation. We
+sweep mesh size x relation count and report bytes/vertex for both."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.engine import RelationEngine
+from repro.core.explicit import ExplicitTriangulation
+from repro.core.mesh import segment_mesh
+from repro.core.segtables import precondition
+from repro.data.meshgen import structured_grid
+
+from . import common
+
+REL_SETS = {
+    "2rel": ["VV", "VT"],                                   # critical points
+    "3rel": ["VE", "VF", "VT"],                             # discrete grad
+    "7rel": ["VV", "VE", "VF", "VT", "EF", "ET", "FT"],     # MS complex
+}
+
+
+def run(quick: bool = True) -> List[str]:
+    rows = []
+    sizes = ((10, 14) if quick else (10, 14, 20, 26))
+    for n in sizes:
+        mesh = structured_grid(n, n, n)
+        sm = segment_mesh(mesh, capacity=64)
+        for label, rels in REL_SETS.items():
+            pre = precondition(sm, relations=rels)
+            gale = RelationEngine(pre, rels)
+            ex = ExplicitTriangulation(pre, rels)
+            bg = common.ds_memory_bytes(gale)
+            be = ex.memory_bytes()
+            rows.append(common.row(
+                f"memory_scaling/n{n}/{label}", 0.0,
+                f"verts={sm.n_vertices};gale_B_per_v={bg / sm.n_vertices:.0f};"
+                f"explicit_B_per_v={be / sm.n_vertices:.0f};"
+                f"ratio={be / max(bg, 1):.2f}"))
+    return rows

@@ -1,0 +1,38 @@
+"""Paper Tables 3/4: scalability with the number of consumers.
+
+The CPU-thread count of the paper maps to the *consumer batch width*
+(segments classified per device dispatch) in our vectorized consumers;
+producer parallelism maps to the engine lookahead. We sweep width for GALE
+and ACTOPO on the largest dataset, mirroring the paper's Stent runs."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.algorithms.critical_points import critical_points
+from repro.algorithms.discrete_gradient import discrete_gradient
+
+from . import common
+from .bench_algorithms import CP_RELS, DG_RELS
+
+WIDTHS = (2, 4, 8, 16, 32)
+
+
+def run(quick: bool = True) -> List[str]:
+    dataset = "fish" if quick else "stent"
+    rows = []
+    for algo, rels, fn in (
+            ("critical_points", CP_RELS, critical_points),
+            ("discrete_gradient", DG_RELS, discrete_gradient)):
+        sm, pre, rank, t_pre = common.prepare(dataset, rels)
+        for kind in ("gale", "actopo"):
+            for w in WIDTHS if not quick else WIDTHS[1:4]:
+                ds = common.make_ds(kind, pre, rels, lookahead=w)
+                t, _ = common.timed(fn, ds, pre, rank, batch_segments=w)
+                st = ds.stats if hasattr(ds, "stats") else ds.engine.stats
+                rows.append(common.row(
+                    f"scalability/{algo}/{dataset}/{kind}/w{w}", t,
+                    f"algo_s={t:.3f};launches={st.kernel_launches};"
+                    f"produced={st.segments_produced};"
+                    f"mem_mb={common.ds_memory_bytes(ds) / 1e6:.1f}"))
+    return rows

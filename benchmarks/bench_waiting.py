@@ -1,0 +1,50 @@
+"""Paper Tables 5/6/7 + Fig. 10: consumer waiting-time breakdown
+(request push / in queue / data preparation / kernel / integration) per
+algorithm and consumer width, from the engine's phase accounting."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.algorithms.critical_points import critical_points
+from repro.algorithms.discrete_gradient import discrete_gradient
+from repro.algorithms.morse_smale import morse_smale
+
+from . import common
+from .bench_algorithms import CP_RELS, DG_RELS, MS_RELS
+
+
+def _fmt(st, total):
+    wait = st.t_enqueue + st.t_queue + st.t_prepare + st.t_kernel \
+        + st.t_integrate
+    return (f"total_s={total:.3f};wait_s={wait:.3f};"
+            f"push_s={st.t_enqueue:.4f};queue_s={st.t_queue:.4f};"
+            f"prep_s={st.t_prepare:.4f};kernel_s={st.t_kernel:.4f};"
+            f"integrate_s={st.t_integrate:.4f};requests={st.requests};"
+            f"hits={st.cache_hits};misses={st.cache_misses}")
+
+
+def run(quick: bool = True) -> List[str]:
+    dataset = "fish" if quick else "stent"
+    rows = []
+    algos = (
+        ("critical_points", CP_RELS,
+         lambda ds, pre, rank, w: critical_points(ds, pre, rank,
+                                                  batch_segments=w)),
+        ("discrete_gradient", DG_RELS,
+         lambda ds, pre, rank, w: discrete_gradient(ds, pre, rank,
+                                                    batch_segments=w)),
+        ("morse_smale", MS_RELS,
+         lambda ds, pre, rank, w: morse_smale(
+             ds, pre, discrete_gradient(ds, pre, rank, batch_segments=w))),
+    )
+    widths = (1, 16) if quick else (1, 8, 16, 32)
+    for algo, rels, fn in algos:
+        sm, pre, rank, _ = common.prepare(dataset, rels)
+        for w in widths:
+            ds = common.make_ds("gale", pre, rels)
+            t, _ = common.timed(fn, ds, pre, rank, w)
+            rows.append(common.row(
+                f"waiting/{algo}/{dataset}/consumers{w}", t,
+                _fmt(ds.stats, t)))
+    return rows

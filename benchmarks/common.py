@@ -1,0 +1,79 @@
+"""Shared benchmark utilities: datasets, data-structure factories, timing."""
+
+from __future__ import annotations
+
+import resource
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.algorithms import fields
+from repro.algorithms.critical_points import total_order
+from repro.core.engine import RelationEngine
+from repro.core.explicit import ActopoDS, ExplicitTriangulation, TopoClusterDS
+from repro.core.mesh import segment_mesh
+from repro.core.segtables import precondition
+from repro.data.meshgen import load_dataset
+
+# Reduced-scale mirrors of the paper's Table-2 datasets (container scale).
+QUICK_DATASETS = ("engine", "foot", "fish")
+FULL_DATASETS = ("engine", "foot", "fish", "asteroid", "hole", "stent")
+
+
+def prepare(dataset: str, relations, capacity: int = 64, seed: int = 0):
+    mesh = load_dataset(dataset, scalar_fn=fields.gaussians(seed, k=6,
+                                                            sigma=6.0))
+    sm = segment_mesh(mesh, capacity=capacity)
+    t0 = time.perf_counter()
+    pre = precondition(sm, relations=list(relations))
+    t_pre = time.perf_counter() - t0
+    rank = total_order(sm.scalars)
+    return sm, pre, rank, t_pre
+
+
+def make_ds(kind: str, pre, relations, **kw):
+    """Factory for the three compared data structures (paper §5.2)."""
+    if kind == "gale":
+        return RelationEngine(pre, relations, backend="xla",
+                              lookahead=kw.get("lookahead", 8),
+                              batch_max=kw.get("batch_max", 64),
+                              cache_segments=kw.get("cache_segments", 1024),
+                              block_x=kw.get("block_x", 256),
+                              block_y=kw.get("block_y", 256))
+    if kind == "actopo":
+        return ActopoDS(pre, relations,
+                        lookahead=kw.get("lookahead", 8),
+                        cache_segments=kw.get("cache_segments", 1024))
+    if kind == "topocluster":
+        return TopoClusterDS(pre, relations)
+    if kind == "explicit":
+        return ExplicitTriangulation(pre, relations)
+    raise KeyError(kind)
+
+
+def ds_memory_bytes(ds) -> int:
+    """Resident bytes of the data structure itself."""
+    if isinstance(ds, ExplicitTriangulation):
+        return ds.memory_bytes()
+    eng = ds if isinstance(ds, RelationEngine) else ds.engine
+    tables = sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                 for a in eng._dev.values())
+    cache = 0
+    for (M, L, n) in eng.cache._store.values():
+        cache += int(np.prod(M.shape)) * 4 + int(np.prod(L.shape)) * 4
+    return tables + cache
+
+
+def peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def timed(fn: Callable, *a, **kw) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = fn(*a, **kw)
+    return time.perf_counter() - t0, out
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV (plus a roofline summary read from the
+dry-run artifacts when present).
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full dataset pool (slower)")
+    ap.add_argument("--only", default="",
+                    help="comma list: algorithms,scalability,waiting,"
+                         "kernel_params")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (bench_algorithms, bench_kernel_params,
+                            bench_memory_scaling, bench_scalability,
+                            bench_waiting)
+
+    suites = {
+        "algorithms": bench_algorithms,     # paper Figs. 7/8/9
+        "scalability": bench_scalability,   # paper Tables 3/4
+        "waiting": bench_waiting,           # paper Tables 5/6/7
+        "kernel_params": bench_kernel_params,  # paper Appendix A
+        "memory_scaling": bench_memory_scaling,  # Figs. 7-9 memory bars
+    }
+    print("name,us_per_call,derived")
+    for name, mod in suites.items():
+        if only and name not in only:
+            continue
+        for row in mod.run(quick=quick):
+            print(row, flush=True)
+
+    # roofline summary from dry-run artifacts (if the sweep has run)
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "dryrun")
+    if os.path.isdir(d):
+        n_ok = n_skip = n_err = 0
+        for f in os.listdir(d):
+            if not f.endswith(".json"):
+                continue
+            rec = json.load(open(os.path.join(d, f)))
+            s = rec.get("status")
+            n_ok += s == "ok"
+            n_skip += s == "skipped"
+            n_err += s not in ("ok", "skipped")
+        print(f"dryrun/cells_ok,{n_ok},skipped={n_skip};errors={n_err}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Synthetic scalar fields with analytically known critical structure."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sinusoid(freq: float = 0.5):
+    """f = sin(fx)·sin(fy)·sin(fz): a periodic Morse function whose minima /
+    maxima / saddles are known lattice points — used to sanity-check the
+    critical point counts."""
+    def fn(p):
+        q = np.asarray(p, dtype=np.float64) * freq
+        return (np.sin(q[:, 0]) * np.sin(q[:, 1]) * np.sin(q[:, 2])
+                ).astype(np.float32)
+    return fn
+
+
+def radial(center=(0.0, 0.0, 0.0)):
+    """f = |p - c|²: exactly one minimum (vertex nearest c), maxima on the
+    domain boundary."""
+    c = np.asarray(center, dtype=np.float64)
+
+    def fn(p):
+        d = np.asarray(p, dtype=np.float64) - c[None, :]
+        return (d * d).sum(axis=1).astype(np.float32)
+    return fn
+
+
+def gaussians(seed: int = 0, k: int = 6, sigma: float = 6.0, scale=32.0):
+    """Sum of k random Gaussian bumps — a generic multi-extremum field."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(0, scale, size=(k, 3))
+    signs = rng.choice([-1.0, 1.0], size=k)
+
+    def fn(p):
+        p = np.asarray(p, dtype=np.float64)
+        acc = np.zeros(len(p))
+        for c, s in zip(centers, signs):
+            d2 = ((p - c[None, :]) ** 2).sum(axis=1)
+            acc += s * np.exp(-d2 / (2 * sigma * sigma))
+        return acc.astype(np.float32)
+    return fn
+
+
+def with_sos_tiebreak(scalars: np.ndarray) -> np.ndarray:
+    """Simulation-of-simplicity: make the field injective by breaking ties
+    with the vertex index (order-preserving). Returns float64."""
+    s = np.asarray(scalars, dtype=np.float64)
+    n = len(s)
+    span = np.ptp(s)
+    span = span if span > 0 else 1.0
+    eps = span * 1e-9
+    return s + eps * (np.arange(n) / max(n, 1))

@@ -1,0 +1,129 @@
+"""Morse–Smale complex extraction from a discrete gradient (paper §5.1,
+'MorseSmaleComplex', following Robins et al. [37]).
+
+We compute the 1-skeleton of the MS complex plus the descending/ascending
+segmentation:
+
+  - descending 1-separatrices: V-paths from each critical edge's endpoints
+    through vertex→edge gradient pairs down to minima;
+  - ascending 1-separatrices: dual V-paths from each critical face's cofacet
+    tets through tet→face pairs up to maxima (needs the **FT** relation — one
+    of the paper's 7 MS queues);
+  - basin segmentation: every vertex labeled by the minimum its V-path
+    reaches, every tet by the maximum.
+
+TPU adaptation: TTK traces separatrices sequentially (the paper's worst case
+for localized structures — segments get revisited unpredictably). We rewrite
+path-following as **pointer jumping** on global successor arrays: log₂(n)
+rounds of `succ = succ[succ]`, fully data-parallel. The successor arrays
+themselves are assembled segment-by-segment through the data structure, which
+preserves the paper's access pattern (every segment's FT block is requested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .discrete_gradient import GradientField
+
+
+@dataclasses.dataclass
+class MSComplex:
+    # vertex-side (descending)
+    dest_min: np.ndarray        # (nv,) gid of reached minimum
+    # tet-side (ascending); -1 where the path exits through the boundary
+    dest_max: np.ndarray        # (nt,)
+    saddle1_ends: np.ndarray    # (n_s1, 3): [edge gid, min0, min1]
+    saddle2_ends: np.ndarray    # (n_s2, 3): [face gid, max0, max1]
+
+    def counts(self) -> Dict[str, int]:
+        con1 = {(int(e[1]), int(e[2])) for e in self.saddle1_ends}
+        con2 = {(int(e[1]), int(e[2])) for e in self.saddle2_ends}
+        return {
+            "saddle1": len(self.saddle1_ends),
+            "saddle2": len(self.saddle2_ends),
+            "basins_min": len(np.unique(self.dest_min)),
+            "basins_max": len(np.unique(self.dest_max[self.dest_max >= 0])),
+            "arcs": len(con1) + len(con2),
+        }
+
+
+@jax.jit
+def _pointer_jump(succ: jnp.ndarray) -> jnp.ndarray:
+    n = succ.shape[0]
+    rounds = int(np.ceil(np.log2(max(n, 2)))) + 1
+
+    def body(_, s):
+        return s[s]
+
+    return jax.lax.fori_loop(0, rounds, body, succ)
+
+
+def _gather_ft(ds, pre, batch_segments: int = 16) -> np.ndarray:
+    """Assemble the global FT table (nf, 2) through the data structure —
+    every segment's FT block is produced/consumed (GALE's FT queue)."""
+    nf = pre.n_faces
+    ft = np.full((nf, 2), -1, dtype=np.int64)
+    ns = pre.smesh.n_segments
+    for b0 in range(0, ns, batch_segments):
+        segs = list(range(b0, min(b0 + batch_segments, ns)))
+        if hasattr(ds, "prefetch"):
+            ds.prefetch("FT", list(range(segs[-1] + 1,
+                                         min(segs[-1] + 1 + len(segs), ns))))
+        for s, (M, L) in zip(segs, ds.get_batch("FT", segs)):
+            lo = int(pre.I_F[s])
+            n = M.shape[0]
+            w = min(2, M.shape[1])
+            ft[lo:lo + n, :w] = M[:, :w]
+    return ft
+
+
+def morse_smale(ds, pre, grad: GradientField,
+                batch_segments: int = 16) -> MSComplex:
+    sm = pre.smesh
+    nv, nt = sm.n_vertices, sm.n_tets
+    E = pre.E
+
+    # ---- descending: vertex successor through v->e pairs -------------------
+    e = grad.pair_v2e                      # (nv,)
+    other = np.where(e >= 0,
+                     np.where(E[np.maximum(e, 0), 0] == np.arange(nv),
+                              E[np.maximum(e, 0), 1],
+                              E[np.maximum(e, 0), 0]),
+                     np.arange(nv))
+    dest_min = np.asarray(_pointer_jump(jnp.asarray(other)))
+
+    # ---- ascending: tet successor through t->f pairs + FT ------------------
+    ft = _gather_ft(ds, pre, batch_segments)
+    f = grad.pair_t2f                      # (nt,) face this tet is paired to
+    cof0 = ft[np.maximum(f, 0), 0]
+    cof1 = ft[np.maximum(f, 0), 1]
+    me = np.arange(nt)
+    nxt = np.where(cof0 == me, cof1, cof0)  # the tet across the paired face
+    succ_t = np.where((f >= 0) & (nxt >= 0), nxt, me)
+    # paths that exit through a boundary face stall on a non-critical tet
+    dest_t = np.asarray(_pointer_jump(jnp.asarray(succ_t)))
+    reached_max = grad.crit_t[dest_t]
+    dest_max = np.where(reached_max, dest_t, -1)
+
+    # ---- separatrices -------------------------------------------------------
+    s1 = np.nonzero(grad.crit_e)[0]
+    ends1 = np.stack([s1, dest_min[E[s1, 0]], dest_min[E[s1, 1]]], axis=1) \
+        if len(s1) else np.zeros((0, 3), np.int64)
+
+    s2 = np.nonzero(grad.crit_f)[0]
+    if len(s2):
+        c0, c1 = ft[s2, 0], ft[s2, 1]
+        m0 = np.where(c0 >= 0, dest_max[np.maximum(c0, 0)], -1)
+        m1 = np.where(c1 >= 0, dest_max[np.maximum(c1, 0)], -1)
+        ends2 = np.stack([s2, m0, m1], axis=1)
+    else:
+        ends2 = np.zeros((0, 3), np.int64)
+
+    return MSComplex(dest_min=dest_min, dest_max=dest_max,
+                     saddle1_ends=ends1, saddle2_ends=ends2)

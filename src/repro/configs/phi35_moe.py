@@ -1,0 +1,14 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L, d=4096, 32H GQA(kv=8), per-expert
+ff=6400, vocab=32064, 16 experts top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, d_ff=6400, vocab=32064, head_dim=128,
+    n_experts=16, top_k=2)
+
+SMOKE = ArchConfig(
+    name="phi3.5-moe-smoke", family="moe", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=48, vocab=512, head_dim=16,
+    n_experts=4, top_k=2)

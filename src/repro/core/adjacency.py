@@ -1,0 +1,87 @@
+"""Cross-segment completion of adjacency relations (EE / FF / TT).
+
+A segment-local kernel sees only the segment's internal+external tets, so an
+adjacency row for simplex sigma can miss neighbours that share only the
+sub-simplex *not* containing the owner segment's vertex (DESIGN.md §5). The
+complete answer is the union of sigma's row over the owner segments of each
+of its boundary (k-1)-faces — every neighbour shares one of those faces, and
+both simplices contain that face's minimum vertex, hence appear in that
+owner's local tables.
+
+This module assembles that union through the engine (each query fans out to
+<= k+1 segment blocks, exercising the multi-queue batching path).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from .engine import RelationEngine
+
+
+def _local_row(eng: RelationEngine, relation: str, kind: str,
+               seg: int, gid: int) -> set:
+    """Relation row for simplex `gid` inside segment `seg`'s local block
+    (the simplex may be internal or external there)."""
+    t = eng.tables
+    if kind == "E":
+        table = t.LE_global
+    elif kind == "F":
+        table = t.LF_global
+    else:
+        table = t.LT_global
+    row_local = np.nonzero(table[seg] == gid)[0]
+    if len(row_local) == 0:
+        return set()
+    r = int(row_local[0])
+    # full block (internal + external rows): reuse the cached batched block
+    M, L, _ = eng.cache.get((relation, seg)) or (None, None, None)
+    if M is None:
+        eng.get(relation, seg)  # populate cache
+        M, L, _ = eng.cache.get((relation, seg))
+    M = np.asarray(M)
+    L = np.asarray(L)
+    return set(int(x) for x in M[r][: L[r]] if x >= 0)
+
+
+def complete_adjacency(
+    eng: RelationEngine, relation: str, ids: Sequence[int]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Complete EE/FF/TT rows for global simplex ids. Returns padded (M, L).
+    """
+    assert relation in ("EE", "FF", "TT")
+    kind = relation[0]
+    pre = eng.pre
+    sm = pre.smesh
+
+    # boundary (k-1)-faces of each simplex -> owner segments to consult
+    if kind == "E":
+        verts = pre.E[np.asarray(ids)]                # (n, 2) vertices
+        owners = sm.seg_of_vertex[verts]              # (n, 2)
+    elif kind == "F":
+        fe = eng.boundary_FE(ids)                     # (n, 3) edge ids
+        owners = pre.owner_segment("E", fe)
+    else:
+        tf = eng.boundary_TF(ids)                     # (n, 4) face ids
+        owners = pre.owner_segment("F", tf)
+
+    # prefetch all needed segment blocks in one batched request
+    uniq = sorted(set(int(s) for s in owners.reshape(-1)))
+    eng.get_batch(relation, uniq)
+
+    rows = []
+    for i, gid in enumerate(ids):
+        acc: set = set()
+        for s in set(int(x) for x in owners[i]):
+            acc |= _local_row(eng, relation, kind, s, int(gid))
+        acc.discard(int(gid))
+        rows.append(sorted(acc))
+    deg = max((len(r) for r in rows), default=1)
+    M = np.full((len(rows), max(deg, 1)), -1, dtype=np.int64)
+    L = np.zeros(len(rows), dtype=np.int32)
+    for i, r in enumerate(rows):
+        M[i, : len(r)] = r
+        L[i] = len(r)
+    return M, L

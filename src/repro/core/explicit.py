@@ -1,0 +1,231 @@
+"""Explicit Triangulation baseline (paper §5.2): a *global* data structure
+that precomputes and stores every requested topological relation during
+initialization. Vectorized numpy; doubles as the brute-force oracle for
+engine/kernel tests.
+
+Relations are stored as padded ``(n, deg)`` global-id arrays with ``-1``
+padding plus a count vector — the same ``(M, L)`` format the engine emits.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .mesh import _EDGE_COMBOS, _FACE_COMBOS, edge_lookup, face_lookup
+from .segtables import Preconditioned
+
+
+def _invert_to_padded(src_ids: np.ndarray, dst_ids: np.ndarray, n_src: int,
+                      deg: Optional[int] = None):
+    """Group dst_ids by src_ids into a padded (n_src, deg) array (rows sorted
+    ascending)."""
+    order = np.lexsort((dst_ids, src_ids))
+    s, d = src_ids[order], dst_ids[order]
+    counts = np.bincount(s, minlength=n_src)
+    width = int(counts.max()) if len(counts) and counts.max() > 0 else 1
+    deg = width if deg is None else max(deg, width)
+    M = np.full((n_src, deg), -1, dtype=np.int64)
+    offsets = np.zeros(n_src + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    pos = np.arange(len(s)) - offsets[s]
+    M[s, pos] = d
+    return M, counts.astype(np.int32)
+
+
+class ExplicitTriangulation:
+    """Precompute-everything baseline. ``relations`` limits what gets built
+    (so init time/memory reflect the algorithm's needs, as in TTK)."""
+
+    def __init__(self, pre: Preconditioned, relations: Sequence[str]):
+        self.pre = pre
+        self.smesh = pre.smesh
+        self.rel: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+        t0 = time.perf_counter()
+        for r in relations:
+            self._build(r)
+        self.init_time = time.perf_counter() - t0
+
+    # -- construction ---------------------------------------------------------
+
+    def _tet_edges(self) -> np.ndarray:
+        sm, pre = self.smesh, self.pre
+        T = sm.tets
+        nv = sm.n_vertices
+        return np.stack(
+            [edge_lookup(pre.E_keys, nv, T[:, a], T[:, b])
+             for a, b in _EDGE_COMBOS], axis=1)  # (nt, 6)
+
+    def _tet_faces(self) -> np.ndarray:
+        sm, pre = self.smesh, self.pre
+        T = sm.tets
+        nv = sm.n_vertices
+        return np.stack(
+            [face_lookup(pre.F_keys, nv, T[:, a], T[:, b], T[:, c])
+             for a, b, c in _FACE_COMBOS], axis=1)  # (nt, 4)
+
+    def _face_edges(self) -> np.ndarray:
+        pre = self.pre
+        F = pre.F
+        nv = self.smesh.n_vertices
+        return np.stack(
+            [edge_lookup(pre.E_keys, nv, F[:, 0], F[:, 1]),
+             edge_lookup(pre.E_keys, nv, F[:, 0], F[:, 2]),
+             edge_lookup(pre.E_keys, nv, F[:, 1], F[:, 2])], axis=1)
+
+    def _build(self, r: str) -> None:
+        if r in self.rel:
+            return
+        sm, pre = self.smesh, self.pre
+        nv, nt = sm.n_vertices, sm.n_tets
+        T = sm.tets
+        if r == "VT":
+            src = T.reshape(-1)
+            dst = np.repeat(np.arange(nt, dtype=np.int64), 4)
+            self.rel[r] = _invert_to_padded(src, dst, nv)
+        elif r == "VE":
+            E = pre.E
+            src = E.reshape(-1)
+            dst = np.repeat(np.arange(len(E), dtype=np.int64), 2)
+            self.rel[r] = _invert_to_padded(src, dst, nv)
+        elif r == "VF":
+            F = pre.F
+            src = F.reshape(-1)
+            dst = np.repeat(np.arange(len(F), dtype=np.int64), 3)
+            self.rel[r] = _invert_to_padded(src, dst, nv)
+        elif r == "VV":
+            if pre.E is not None:
+                E = pre.E
+            else:  # VV alone does not precondition the edge table
+                from .mesh import enumerate_edges
+                E, _ = enumerate_edges(sm.tets, nv)
+            src = np.concatenate([E[:, 0], E[:, 1]])
+            dst = np.concatenate([E[:, 1], E[:, 0]])
+            self.rel[r] = _invert_to_padded(src, dst, nv)
+        elif r == "ET":
+            te = self._tet_edges()
+            dst = np.repeat(np.arange(nt, dtype=np.int64), 6)
+            self.rel[r] = _invert_to_padded(te.reshape(-1), dst, len(pre.E))
+        elif r == "FT":
+            tf = self._tet_faces()
+            dst = np.repeat(np.arange(nt, dtype=np.int64), 4)
+            self.rel[r] = _invert_to_padded(tf.reshape(-1), dst, len(pre.F))
+        elif r == "EF":
+            fe = self._face_edges()
+            dst = np.repeat(np.arange(len(pre.F), dtype=np.int64), 3)
+            self.rel[r] = _invert_to_padded(fe.reshape(-1), dst, len(pre.E))
+        elif r == "TT":
+            self._build("FT")
+            M, L = self.rel["FT"]
+            both = M[L == 2]  # interior faces: exactly two cofacet tets
+            src = np.concatenate([both[:, 0], both[:, 1]])
+            dst = np.concatenate([both[:, 1], both[:, 0]])
+            self.rel[r] = _invert_to_padded(src, dst, nt)
+        elif r == "EE":
+            # edges sharing a vertex
+            E = pre.E
+            ne = len(E)
+            self._build("VE")
+            M, L = self.rel["VE"]  # (nv, degV)
+            pairs_src, pairs_dst = [], []
+            for col in range(M.shape[1]):
+                a = M[:, col]
+                ok = a >= 0
+                for col2 in range(M.shape[1]):
+                    b = M[:, col2]
+                    sel = ok & (b >= 0) & (a != b)
+                    pairs_src.append(a[sel])
+                    pairs_dst.append(b[sel])
+            src = np.concatenate(pairs_src)
+            dst = np.concatenate(pairs_dst)
+            key = src * np.int64(ne) + dst
+            key = np.unique(key)
+            self.rel[r] = _invert_to_padded(key // ne, key % ne, ne)
+        elif r == "FF":
+            self._build("EF")
+            M, L = self.rel["EF"]
+            nf = len(pre.F)
+            pairs_src, pairs_dst = [], []
+            for col in range(M.shape[1]):
+                a = M[:, col]
+                for col2 in range(M.shape[1]):
+                    b = M[:, col2]
+                    sel = (a >= 0) & (b >= 0) & (a != b)
+                    pairs_src.append(a[sel])
+                    pairs_dst.append(b[sel])
+            src = np.concatenate(pairs_src)
+            dst = np.concatenate(pairs_dst)
+            key = np.unique(src * np.int64(nf) + dst)
+            self.rel[r] = _invert_to_padded(key // nf, key % nf, nf)
+        elif r in ("EV", "FV", "TV", "FE", "TE", "TF"):
+            pass  # boundary relations answered directly below
+        else:
+            raise KeyError(r)
+
+    # -- query API (matches RelationEngine semantics) -------------------------
+
+    def get(self, relation: str, segment: int) -> Tuple[np.ndarray, np.ndarray]:
+        kind = relation[0]
+        iv = self.pre.interval(kind)
+        lo, hi = int(iv[segment]), int(iv[segment + 1])
+        M, L = self.rel[relation]
+        return M[lo:hi], L[lo:hi]
+
+    def get_batch(self, relation: str, segments):
+        return [self.get(relation, s) for s in segments]
+
+    def rows(self, relation: str, ids: np.ndarray):
+        M, L = self.rel[relation]
+        ids = np.asarray(ids)
+        return M[ids], L[ids]
+
+    def memory_bytes(self) -> int:
+        return sum(M.nbytes + L.nbytes for (M, L) in self.rel.values())
+
+
+class TopoClusterDS:
+    """TopoCluster-style baseline [30]: localized, computes relations for the
+    requested segment on demand and discards them immediately (cache of 1
+    batch, no lookahead, no task parallelism)."""
+
+    def __init__(self, pre: Preconditioned, relations, backend="xla", **kw):
+        from .engine import RelationEngine
+        self.engine = RelationEngine(
+            pre, relations, backend=backend, lookahead=0, batch_max=1,
+            cache_segments=8, async_dispatch=False, **kw)
+        self.stats = self.engine.stats
+
+    def get(self, relation, segment):
+        return self.engine.get(relation, segment)
+
+    def get_batch(self, relation, segments):
+        return self.engine.get_batch(relation, segments)
+
+    def prefetch(self, relation, segments):
+        pass  # no proactive computation
+
+
+class ActopoDS:
+    """ACTOPO-style baseline [29]: CPU task-parallel — producers precompute
+    ahead along the traversal but execute synchronously on the same resource
+    as consumers (no accelerator offload, per-request batches)."""
+
+    def __init__(self, pre: Preconditioned, relations, backend="xla",
+                 lookahead=8, cache_segments=512, **kw):
+        from .engine import RelationEngine
+        self.engine = RelationEngine(
+            pre, relations, backend=backend, lookahead=lookahead,
+            batch_max=1, cache_segments=cache_segments,
+            async_dispatch=False, **kw)
+        self.stats = self.engine.stats
+
+    def get(self, relation, segment):
+        return self.engine.get(relation, segment)
+
+    def get_batch(self, relation, segments):
+        return self.engine.get_batch(relation, segments)
+
+    def prefetch(self, relation, segments):
+        self.engine.prefetch(relation, segments)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the segment-relation kernels.
+
+The numerical contract shared with the Pallas kernels
+(``segment_relations.py``):
+
+  meet mode:  C[b, x, y] = |verts(tabX[b, x]) ∩ verts(tabY[b, y])|
+  vv   mode:  C[b, i, j] = #local tets of segment b containing both local
+              vertices i and j
+
+where tables hold *local* vertex ids with ``-1`` padding (padded slots never
+match any vertex id and thus contribute 0). Counts are exact small integers;
+the Pallas kernels compute them as f32 MXU matmuls of one-hot incidence
+matrices and cast back to int32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def incidence(tab: jnp.ndarray, n_vertex_space: int) -> jnp.ndarray:
+    """One-hot incidence A[b, v, s] = 1 iff local vertex v ∈ tab[b, s].
+
+    tab: (B, N, a) int32 local vertex ids, -1 padded."""
+    iota = jnp.arange(n_vertex_space, dtype=jnp.int32)
+    # (B, v, N, a): compare each table slot against each vertex id
+    eq = tab[:, None, :, :] == iota[None, :, None, None]
+    return eq.any(axis=-1).astype(jnp.float32)
+
+
+def relation_counts_meet(tabX: jnp.ndarray, tabY: jnp.ndarray,
+                         n_vertex_space: int) -> jnp.ndarray:
+    """C[b, x, y] = shared-vertex count between tabX[b,x] and tabY[b,y]."""
+    Ax = incidence(tabX, n_vertex_space)  # (B, V, NX)
+    Ay = incidence(tabY, n_vertex_space)  # (B, V, NY)
+    C = jnp.einsum("bvx,bvy->bxy", Ax, Ay,
+                   preferred_element_type=jnp.float32)
+    return C.astype(jnp.int32)
+
+
+def relation_counts_vv(T_local: jnp.ndarray, n_vertex_space: int) -> jnp.ndarray:
+    """C[b, i, j] = number of local tets containing both vertices i and j."""
+    A = incidence(T_local, n_vertex_space)  # (B, V, NT)
+    C = jnp.einsum("bvt,bwt->bvw", A, A,
+                   preferred_element_type=jnp.float32)
+    return C.astype(jnp.int32)

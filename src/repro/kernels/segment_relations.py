@@ -1,0 +1,134 @@
+"""Pallas TPU kernels for segment-local topological relation extraction.
+
+This is the TPU-native replacement for GALE's CUDA worker-producer kernels
+(paper §4.6, Algorithms 1-2). Instead of one warp per segment performing
+``atomicCAS`` insertions, each grid step builds one-hot vertex-incidence
+blocks in VMEM and contracts them on the MXU:
+
+    meet mode:  C = Ax · Ayᵀ    Ax[x, v] = 1 iff local vertex v ∈ tabX[x]
+    vv   mode:  C = Av · Avᵀ    Av[i, t] = 1 iff local vertex i ∈ tet t
+
+``C[x, y]`` is the shared-vertex count (meet) or shared-tet count (vv); a
+cheap predicate epilogue outside the kernel (``ops.py``) turns counts into
+boolean relations and compacts them into the paper's padded ``(M, L)``
+relation arrays via ``top_k``. Deduplication is inherent to counting — the
+role played by ``atomicCAS`` on the GPU.
+
+Grid: ``(segment, row_block, col_block)``. Tables are passed transposed,
+``(B, arity, N)``, so the last (lane) dimension is the 128-aligned simplex
+axis. Block sizes are the TPU analogue of the paper's ``t_s``/``t_b``/``n_b``
+kernel parameters and are swept by ``benchmarks/bench_kernel_params.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest multiple of 128 that divides n and is <= target (n is a
+    multiple of 128 by construction)."""
+    best = 128
+    b = 128
+    while b <= min(n, target):
+        if n % b == 0:
+            best = b
+        b += 128
+    return best
+
+
+def _meet_kernel(tabx_ref, taby_ref, out_ref, *, nvl: int, ax: int, ay: int):
+    """One (row_block x col_block) tile of shared-vertex counts."""
+    def build(tab_ref, arity, nrows):
+        acc = None
+        for c in range(arity):
+            col = tab_ref[0, c, :]  # (nrows,) local vertex ids, -1 padded
+            eq = col[:, None] == jax.lax.broadcasted_iota(
+                jnp.int32, (nrows, nvl), 1)
+            acc = eq if acc is None else jnp.logical_or(acc, eq)
+        return acc.astype(jnp.float32)
+
+    Ax = build(tabx_ref, ax, tabx_ref.shape[2])  # (NXb, nvl)
+    Ay = build(taby_ref, ay, taby_ref.shape[2])  # (NYb, nvl)
+    C = jax.lax.dot_general(
+        Ax, Ay, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[0, :, :] = C.astype(jnp.int32)
+
+
+def _vv_kernel(tet_ref, out_ref, *, blk: int):
+    """One (vertex_block x vertex_block) tile of shared-tet counts."""
+    i0 = pl.program_id(1) * blk
+    j0 = pl.program_id(2) * blk
+    nt = tet_ref.shape[2]
+
+    def build(base):
+        acc = None
+        ids = base + jax.lax.broadcasted_iota(jnp.int32, (blk, nt), 0)
+        for c in range(4):
+            row = tet_ref[0, c, :]  # (NT,)
+            eq = ids == row[None, :]
+            acc = eq if acc is None else jnp.logical_or(acc, eq)
+        return acc.astype(jnp.float32)
+
+    Ai = build(i0)  # (blk, NT)
+    Aj = build(j0)
+    C = jax.lax.dot_general(
+        Ai, Aj, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[0, :, :] = C.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nvl", "block_x", "block_y", "interpret"))
+def relation_counts_meet_pallas(
+    tabX_t: jnp.ndarray,   # (B, ax, NX) int32, transposed table, -1 padded
+    tabY_t: jnp.ndarray,   # (B, ay, NY)
+    *, nvl: int, block_x: int = 256, block_y: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """C (B, NX, NY) int32 shared-vertex counts."""
+    B, ax, NX = tabX_t.shape
+    _, ay, NY = tabY_t.shape
+    bx = _pick_block(NX, block_x)
+    by = _pick_block(NY, block_y)
+    grid = (B, NX // bx, NY // by)
+    kernel = functools.partial(_meet_kernel, nvl=nvl, ax=ax, ay=ay)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ax, bx), lambda b, i, j: (b, 0, i)),
+            pl.BlockSpec((1, ay, by), lambda b, i, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bx, by), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, NX, NY), jnp.int32),
+        interpret=interpret,
+    )(tabX_t, tabY_t)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nvl", "block", "interpret"))
+def relation_counts_vv_pallas(
+    T_local_t: jnp.ndarray,  # (B, 4, NT) int32 transposed tet table
+    *, nvl: int, block: int = 128, interpret: bool = True,
+) -> jnp.ndarray:
+    """C (B, nvl, nvl) int32 shared-tet counts between local vertices."""
+    B, four, NT = T_local_t.shape
+    assert four == 4
+    blk = _pick_block(nvl, block)
+    grid = (B, nvl // blk, nvl // blk)
+    kernel = functools.partial(_vv_kernel, blk=blk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 4, NT), lambda b, i, j: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, blk, blk), lambda b, i, j: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, nvl, nvl), jnp.int32),
+        interpret=interpret,
+    )(T_local_t)

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Import of this module never touches jax device state; meshes are built by
+functions only (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Tiny mesh for CI-scale dry-run tests (8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(n for n in mesh.axis_names if n in ("pod", "data"))

@@ -1,0 +1,127 @@
+"""Render EXPERIMENTS.md roofline/dry-run tables from the per-cell JSONs.
+
+  PYTHONPATH=src python -m repro.launch.report experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load(d: str) -> List[dict]:
+    recs = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            recs.append(json.load(open(os.path.join(d, f))))
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x / div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(recs: List[dict]) -> str:
+    """Single-pod baseline roofline table (one row per arch x shape)."""
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck "
+        "| roofline frac | useful FLOPs | HBM/dev (adj) | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|"]
+    rows = [r for r in recs if r.get("mesh") == "singlepod"]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"SKIP (full attention @500k) | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | — | — |")
+            continue
+        t = r["roofline"]
+        m = r["memory"]
+        temp = (m.get("temp_bytes") or 0) \
+            - (m.get("cpu_f32_remat_artifact_bytes") or 0)
+        total_dev = temp + (m.get("argument_bytes") or 0)
+        u = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['t_compute_s'])} | "
+            f"{fmt_s(t['t_memory_s'])} | {fmt_s(t['t_collective_s'])} | "
+            f"{t['bottleneck']} | {t['roofline_fraction']:.3f} | "
+            f"{u:.2f} | {fmt_b(total_dev)} | "
+            f"{'yes' if total_dev < 16e9 else 'NO'} |"
+            if u is not None else
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['t_compute_s'])} | "
+            f"{fmt_s(t['t_memory_s'])} | {fmt_s(t['t_collective_s'])} | "
+            f"{t['bottleneck']} | {t['roofline_fraction']:.3f} | - | "
+            f"{fmt_b(total_dev)} | {'yes' if total_dev < 16e9 else 'NO'} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs: List[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile | args/dev | temp/dev "
+        "(adj) | collectives (AR/AG/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|---|"]
+    recs = sorted(recs, key=lambda r: (
+        r["arch"], SHAPE_ORDER.index(r["shape"]), r.get("mesh", "")))
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('mesh','-')} | "
+                f"{r.get('status')} | - | - | - | - |")
+            continue
+        m = r["memory"]
+        c = r["hlo_loop_aware"]["collectives"]
+        cc = "/".join(str(c.get(k, 0)) for k in (
+            "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute"))
+        temp = (m.get("temp_bytes") or 0) \
+            - (m.get("cpu_f32_remat_artifact_bytes") or 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['t_compile_s']:.0f}s | {fmt_b(m.get('argument_bytes'))} | "
+            f"{fmt_b(temp)} | {cc} |")
+    return "\n".join(lines)
+
+
+def summary(recs):
+    ok = [r for r in recs if r.get("status") == "ok"]
+    sk = [r for r in recs if r.get("status") == "skipped"]
+    er = [r for r in recs if r.get("status") not in ("ok", "skipped")]
+    return f"{len(ok)} compiled, {len(sk)} skipped, {len(er)} errors"
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(d)
+    print("## Summary:", summary(recs))
+    print()
+    print("### Roofline (single-pod 16x16, per-device terms)")
+    print(roofline_table(recs))
+    print()
+    print("### Dry-run (all cells x both meshes)")
+    print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy-decode
+with the per-family cache (KV / SSM state / hybrid).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..distributed.sharding import Runtime
+from ..launch.steps import make_serve_step
+from ..models import lm
+
+
+def generate(cfg, rt, params, prompts: np.ndarray, gen: int,
+             cache_len: int):
+    """prompts (B, P) -> generated tokens (B, gen). Greedy. The prompt is
+    consumed through the decode path token-by-token (prefill-by-decode),
+    which exercises the same serve_step the dry-run lowers."""
+    B, P = prompts.shape
+    cache = lm.init_cache(cfg, B, cache_len, rt)
+    step = jax.jit(make_serve_step(cfg, rt), donate_argnums=(1,))
+    tok = jnp.asarray(prompts[:, :1], jnp.int32)
+    out = []
+    for t in range(P + gen - 1):
+        batch = {"token": tok, "pos": jnp.full((B,), t, jnp.int32)}
+        if cfg.family == "vlm":
+            batch["positions3d"] = jnp.broadcast_to(
+                jnp.full((1, 1, 1), t, jnp.int32), (3, B, 1))
+        nxt, cache = step(params, cache, batch)
+        if t + 1 < P:
+            tok = jnp.asarray(prompts[:, t + 1: t + 2], jnp.int32)
+        else:
+            tok = nxt
+            out.append(np.asarray(nxt)[:, 0])
+    return np.stack(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family == "encdec":
+        raise SystemExit("use examples/serve_lm.py text path for encdec")
+    rt = Runtime(mesh=None, remat="none")
+    params = lm.init_params(jax.random.PRNGKey(args.seed), cfg, rt)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len),
+                           dtype=np.int32)
+    t0 = time.time()
+    toks = generate(cfg, rt, params, prompts, args.gen, args.cache_len)
+    dt = time.time() - t0
+    n = args.batch * (args.prompt_len + args.gen)
+    print(f"[serve] {cfg.name}: {toks.shape} generated, "
+          f"{n / dt:.1f} tok/s, sample: {toks[0][:8].tolist()}")
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+shardable, no device allocation. Used by the dry-run and the roofline pass.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch stand-ins for one (arch, shape) cell.
+
+    decode shapes describe ONE new token against a KV cache of
+    ``shape.seq_len`` (the cache itself is built by ``lm.init_cache`` /
+    ``cache_specs``)."""
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    i32, bf16 = jnp.int32, jnp.bfloat16
+
+    if cfg.family == "encdec":
+        if kind == "train":
+            return {"frames": _sds((B, S, cfg.d_model), bf16),
+                    "tokens": _sds((B, S), i32),
+                    "labels": _sds((B, S), i32)}
+        if kind == "prefill":
+            return {"frames": _sds((B, S, cfg.d_model), bf16),
+                    "tokens": _sds((B, S), i32)}
+        return {"token": _sds((B, 1), i32), "pos": _sds((B,), i32)}
+
+    if cfg.family == "vlm":
+        nv = cfg.n_vision_tokens
+        st = S - nv  # text tokens; total sequence stays seq_len
+        if kind == "train":
+            return {"tokens": _sds((B, st), i32),
+                    "labels": _sds((B, st), i32),
+                    "vision_embeds": _sds((B, nv, cfg.d_model), bf16),
+                    "positions3d": _sds((3, B, S), i32)}
+        if kind == "prefill":
+            return {"tokens": _sds((B, st), i32),
+                    "vision_embeds": _sds((B, nv, cfg.d_model), bf16),
+                    "positions3d": _sds((3, B, S), i32)}
+        return {"token": _sds((B, 1), i32), "pos": _sds((B,), i32),
+                "positions3d": _sds((3, B, 1), i32)}
+
+    if kind == "train":
+        return {"tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+    if kind == "prefill":
+        return {"tokens": _sds((B, S), i32)}
+    return {"token": _sds((B, 1), i32), "pos": _sds((B,), i32)}
+
+
+def concrete_batch(cfg: ArchConfig, shape: ShapeConfig, rng=None):
+    """Materialize a random batch matching input_specs (smoke tests)."""
+    import numpy as np
+    r = np.random.default_rng(0 if rng is None else rng)
+    out = {}
+    for k, s in input_specs(cfg, shape).items():
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab if k in ("tokens", "labels", "token") else \
+                max(shape.seq_len, 2)
+            out[k] = jnp.asarray(
+                r.integers(0, hi, size=s.shape, dtype=np.int32))
+        else:
+            out[k] = jnp.asarray(
+                r.normal(0, 1, size=s.shape).astype(np.float32),
+                dtype=s.dtype)
+    return out

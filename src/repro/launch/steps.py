@@ -1,0 +1,52 @@
+"""Step functions (train / prefill / serve) shared by the trainer, the
+server, and the dry-run."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import Runtime
+from ..models import lm
+from ..optim import adamw
+
+
+def make_train_step(cfg: ArchConfig, rt: Runtime, opt_cfg: adamw.AdamWConfig):
+    def cast_for_compute(p):
+        if not rt.bf16_gather:
+            return p
+        # cast fp32 masters to bf16 while still FSDP-sharded: the per-layer
+        # weight all-gather then moves half the bytes (EXPERIMENTS.md §Perf)
+        return jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16)
+            if x.ndim >= 2 and x.dtype == jnp.float32 else x, p)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(cast_for_compute(p), batch, cfg, rt)
+        )(params)
+        params, opt_state, metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, rt: Runtime):
+    def prefill_step(params, batch):
+        logits, _ = lm.prefill_fn(params, batch, cfg, rt)
+        return jnp.argmax(logits, axis=-1)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, rt: Runtime):
+    """One greedy decode step: (params, cache, {token,pos,...}) ->
+    (next_token, new_cache)."""
+    def serve_step(params, cache, batch):
+        logits, new_cache = lm.decode_fn(params, cache, batch, cfg, rt)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+    return serve_step

@@ -1,0 +1,319 @@
+"""Shared neural-net layers for the architecture pool: norms, rotary
+embeddings (incl. M-RoPE), GQA/MQA attention with KV cache, GLU MLPs.
+
+Pure-functional: parameters are plain nested dicts of jnp arrays (fp32
+master); compute happens in the config's compute dtype (bf16 by default)
+with fp32 softmax/norm accumulation. Activation sharding hints are applied
+by the caller via ``with_sharding_constraint`` so these layers stay
+mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def _init(rng, shape, scale):
+    return (scale * jax.random.truncated_normal(
+        rng, -2.0, 2.0, shape, dtype=jnp.float32))
+
+
+def dense_init(rng, d_in, d_out, bias=False) -> Params:
+    p = {"w": _init(rng, (d_in, d_out), 1.0 / np.sqrt(d_in))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray, dtype) -> jnp.ndarray:
+    y = x @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def rmsnorm_init(d) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["g"]).astype(dt)
+
+
+def layernorm_init(d) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (..., S) -> cos/sin (..., S, head_dim//2), fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                 sections: Tuple[int, int, int]
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Multimodal RoPE (Qwen2-VL): positions (3, B, S) are (t, h, w) ids;
+    frequency slots are split into per-component sections."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    comp = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    # select per-slot component: (B, S, half)
+    p = jnp.moveaxis(positions.astype(jnp.float32), 0, -1)  # (B, S, 3)
+    pos_per_slot = jnp.take(p, comp, axis=-1)               # (B, S, half)
+    ang = pos_per_slot * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x (B, S, H, hd); cos/sin (B, S, half) or (S, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / MHA) with optional KV cache
+
+
+def attention_init(rng, d_model, n_heads, n_kv, head_dim, bias=False) -> Params:
+    """Projections are stored HEAD-SHAPED — wq (D, H, hd) etc. — so the head
+    axis is a real tensor dim that shards cleanly over the TP mesh axis (no
+    fused-dim reshape, no GSPMD resharding; uneven head counts like 28/16 are
+    padded by GSPMD)."""
+    ks = jax.random.split(rng, 4)
+    s = 1.0 / np.sqrt(d_model)
+    p = {
+        "wq": _init(ks[0], (d_model, n_heads, head_dim), s),
+        "wk": _init(ks[1], (d_model, n_kv, head_dim), s),
+        "wv": _init(ks[2], (d_model, n_kv, head_dim), s),
+        "wo": _init(ks[3], (n_heads, head_dim, d_model),
+                    1.0 / np.sqrt(n_heads * head_dim)),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+    return p
+
+
+def repeat_kv(k, n_heads):
+    """GQA: repeat KV heads to the full head count (keeps one clean head
+    axis end-to-end instead of a grouped reshape that fights the sharding)."""
+    rep = n_heads // k.shape[2]
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def _sdpa(q, k, v, mask, dtype):
+    """q (B,S,H,hd), k/v (B,T,H,hd) (KV already repeated). fp32 softmax;
+    mask broadcastable to (B,H,S,T)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(hd)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+# Sequences at or above this length use the query-chunked attention path
+# (full S x S f32 score materialization exceeds per-device HBM already at
+# 4k x global_batch 256 on the production mesh).
+ATTN_CHUNK_THRESHOLD = 2048
+ATTN_Q_CHUNK = 1024
+
+
+def _sdpa_chunked(q, k, v, causal, dtype, chunk=ATTN_Q_CHUNK):
+    """Memory-efficient attention: lax.scan over query chunks; each chunk
+    attends to the full K/V with a positionwise causal mask. Peak score
+    buffer is (B, H, chunk, T) instead of (B, H, S, T). This is the pure-JAX
+    shape of the flash-attention Pallas kernel (kernels/flash_attention.py);
+    XLA overlaps chunk steps, the TPU kernel tiles VMEM explicitly."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    nc = S // chunk
+    qr = jnp.moveaxis(q.reshape(B, nc, chunk, H, hd), 1, 0)
+
+    def step(_, inp):
+        qc, i = inp
+        pos_q = i * chunk + jnp.arange(chunk)
+        if causal:
+            mask = (jnp.arange(T)[None, :] <= pos_q[:, None]
+                    )[None, None, :, :]
+        else:
+            mask = jnp.ones((1, 1, chunk, T), bool)
+        return None, _sdpa(qc, k, v, mask, dtype)
+
+    # flash-style backward: recompute each chunk's scores instead of saving
+    # (nc, B, H, cq, T) f32 probabilities across the whole sequence
+    _, outs = jax.lax.scan(jax.checkpoint(step, prevent_cse=False), None,
+                           (qr, jnp.arange(nc, dtype=jnp.int32)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def attention(
+    p: Params, x: jnp.ndarray, cos, sin, *,
+    n_heads: int, n_kv: int, head_dim: int, dtype,
+    causal: bool = True,
+    kv_cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    kv: Optional[jnp.ndarray] = None,     # cross-attention source
+    hint_heads=None,                       # sharding hint for (B,S,H,hd)
+    hint_kv_seq=None,                      # sharding hint for the KV cache
+    flash_decode=None,                     # distributed decode attention
+):
+    """Returns (out (B,S,D), new_kv_cache or None).
+
+    Modes:
+      - training/prefill: kv_cache=None -> full causal self attention
+      - decode:  kv_cache=(K (B,T,kv,hd), V), cache_pos (B,) write index
+      - cross:   kv = encoder states (no cache logic, no causal mask)
+    """
+    B, S, _ = x.shape
+    src = x if kv is None else kv
+    hh = hint_heads or (lambda t: t)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = hh(q)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        if kv is None:
+            k = apply_rope(k, cos, sin)
+    new_cache = None
+    if kv_cache is not None:
+        K, V = kv_cache
+        T = K.shape[1]
+        idx = cache_pos[:, None]                          # (B,1)
+        iota_t = jnp.arange(T)[None, :]
+
+        def write_one(cache_b, new_b, p):
+            return jax.lax.dynamic_update_slice(
+                cache_b, new_b.astype(cache_b.dtype), (p, 0, 0))
+        # batched in-place token write (aliases the donated cache buffer;
+        # a full-cache jnp.where would read+write T x kv x hd per layer)
+        K = jax.vmap(write_one)(K, k, cache_pos)
+        V = jax.vmap(write_one)(V, v, cache_pos)
+        if hint_kv_seq is not None:
+            K, V = hint_kv_seq(K), hint_kv_seq(V)
+        new_cache = (K, V)
+        out = None
+        if flash_decode is not None:
+            out = flash_decode(q, K, V, cache_pos)
+        if out is None:
+            mask = (iota_t <= idx)[:, None, None, :]      # (B,1,1,T)
+            out = _sdpa(q, repeat_kv(K.astype(dtype), n_heads),
+                        repeat_kv(V.astype(dtype), n_heads), mask, dtype)
+    else:
+        T = src.shape[1]
+        is_causal = causal and kv is None
+        kf, vf = hh(repeat_kv(k, n_heads)), hh(repeat_kv(v, n_heads))
+        if S >= ATTN_CHUNK_THRESHOLD and S % ATTN_Q_CHUNK == 0:
+            out = _sdpa_chunked(q, kf, vf, is_causal, dtype)
+        else:
+            if is_causal:
+                mask = jnp.tril(jnp.ones((S, T), bool))[None, None]
+            else:
+                mask = jnp.ones((1, 1, S, T), bool)
+            out = _sdpa(q, kf, vf, mask, dtype)
+    out = hh(out)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def glu_mlp_init(rng, d_model, d_ff) -> Params:
+    ks = jax.random.split(rng, 3)
+    return {"wi": dense_init(ks[0], d_model, d_ff),
+            "wg": dense_init(ks[1], d_model, d_ff),
+            "wo": dense_init(ks[2], d_ff, d_model)}
+
+
+def glu_mlp(p: Params, x, dtype, activation: str = "silu"):
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    h = act(dense(p["wg"], x, dtype)) * dense(p["wi"], x, dtype)
+    return dense(p["wo"], h, dtype)
+
+
+def gelu_mlp_init(rng, d_model, d_ff) -> Params:
+    ks = jax.random.split(rng, 2)
+    return {"wi": dense_init(ks[0], d_model, d_ff),
+            "wo": dense_init(ks[1], d_ff, d_model)}
+
+
+def gelu_mlp(p: Params, x, dtype):
+    return dense(p["wo"], jax.nn.gelu(dense(p["wi"], x, dtype)), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + loss
+
+
+def embed_init(rng, vocab, d_model) -> Params:
+    return {"table": _init(rng, (vocab, d_model), 1.0)}
+
+
+def embed(p: Params, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x, dtype):
+    """Logits via the (possibly tied) embedding table."""
+    return x @ p["table"].astype(dtype).T
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean cross entropy; label gather via one-hot dot so the vocab axis can
+    stay sharded (no gather across shards)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=jnp.float32)
+    gold = jnp.sum(lf * onehot, axis=-1)
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

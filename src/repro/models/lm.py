@@ -1,0 +1,463 @@
+"""Top-level language-model assembly for the architecture pool.
+
+One parameter/forward implementation per *family* (dense, moe, ssm, hybrid,
+encdec, vlm), all sharing layers.py primitives. Layer parameters are stacked
+(leading L axis) and bodies run under ``lax.scan`` + optional remat, which
+keeps HLO size O(1) in depth — essential for 512-device dry-run compiles.
+
+Entry points (used by launch/{train,serve,dryrun}.py):
+  init_params(rng, cfg, rt)          -> params pytree (fp32 masters)
+  loss_fn(params, batch, cfg, rt)    -> scalar loss        (train shapes)
+  prefill_fn(params, batch, cfg, rt) -> (last_logits, cache)
+  decode_fn(params, cache, batch, cfg, rt) -> (logits, new cache)
+  init_cache(cfg, batch, seq, rt)    -> zeroed cache pytree (decode shapes)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers, mamba2, moe
+from ..distributed.sharding import Runtime
+
+P = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _norm(cfg):
+    if cfg.norm == "layernorm":
+        return layers.layernorm_init, layers.layernorm
+    return layers.rmsnorm_init, layers.rmsnorm
+
+
+# ===========================================================================
+# Parameter construction
+
+
+def _attn_block_init(rng, cfg):
+    ninit, _ = _norm(cfg)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    p = {"ln1": ninit(cfg.d_model),
+         "attn": layers.attention_init(k1, cfg.d_model, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.hd, cfg.qkv_bias),
+         "ln2": ninit(cfg.d_model)}
+    if cfg.family == "moe":
+        p["moe"] = moe.moe_init(k2, cfg, ep=_ep_size(cfg))
+    elif cfg.norm == "layernorm":  # whisper-style plain GELU MLP
+        p["mlp"] = layers.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff)
+    else:
+        p["mlp"] = layers.glu_mlp_init(k4, cfg.d_model, cfg.d_ff)
+    return p
+
+
+_EP_OVERRIDE: Optional[int] = None
+
+
+def _ep_size(cfg) -> int:
+    # expert padding must match the EP axis the runtime will use; default 1
+    return _EP_OVERRIDE or 1
+
+
+def init_params(rng, cfg, rt: Optional[Runtime] = None) -> P:
+    global _EP_OVERRIDE
+    _EP_OVERRIDE = rt.ep_size if rt is not None else 1
+    try:
+        return _init_params(rng, cfg)
+    finally:
+        _EP_OVERRIDE = None
+
+
+def _init_params(rng, cfg) -> P:
+    ninit, _ = _norm(cfg)
+    keys = jax.random.split(rng, 8)
+    params: P = {"embed": layers.embed_init(keys[0], cfg.vocab, cfg.d_model),
+                 "ln_f": ninit(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.dense_init(
+            keys[1], cfg.d_model, cfg.vocab)
+
+    def stack(init_fn, n, key):
+        return jax.vmap(init_fn)(jax.random.split(key, n))
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        params["layers"] = stack(lambda k: _attn_block_init(k, cfg),
+                                 cfg.n_layers, keys[2])
+    elif fam == "ssm":
+        params["layers"] = stack(
+            lambda k: {"ln": ninit(cfg.d_model),
+                       "mix": mamba2.mamba2_init(k, cfg)},
+            cfg.n_layers, keys[2])
+    elif fam == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        params["layers"] = jax.vmap(
+            lambda k: stack(
+                lambda k2: {"ln": ninit(cfg.d_model),
+                            "mix": mamba2.mamba2_init(k2, cfg)},
+                cfg.attn_every, k))(jax.random.split(keys[2], groups))
+        # weight-shared attention block; input is concat(hidden, embeds)
+        k5, k6 = jax.random.split(keys[3])
+        shared = _attn_block_init(k5, cfg)
+        shared["in_proj"] = layers.dense_init(
+            k6, 2 * cfg.d_model, cfg.d_model)
+        params["shared_attn"] = shared
+    elif fam == "encdec":
+        params["enc_layers"] = stack(lambda k: _attn_block_init(k, cfg),
+                                     cfg.enc_layers, keys[2])
+
+        def dec_init(k):
+            p = _attn_block_init(k, cfg)
+            k1, k2 = jax.random.split(k)
+            p["ln_x"] = ninit(cfg.d_model)
+            p["xattn"] = layers.attention_init(
+                k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+            return p
+        params["dec_layers"] = stack(dec_init, cfg.n_layers, keys[3])
+        params["pos_enc"] = layers._init(keys[4], (cfg.max_pos, cfg.d_model), 0.02)
+        params["pos_dec"] = layers._init(keys[5], (cfg.max_pos, cfg.d_model), 0.02)
+        params["ln_enc"] = ninit(cfg.d_model)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ===========================================================================
+# Blocks
+
+
+def _attn_block(p, x, cos_sin, cfg, rt, dtype, cache=None, pos=None,
+                causal=True):
+    _, nfn = _norm(cfg)
+    cos, sin = cos_sin if cos_sin is not None else (None, None)
+    h, new_cache = layers.attention(
+        p["attn"], nfn(p["ln1"], x, cfg.norm_eps), cos, sin,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+        dtype=dtype, causal=causal, kv_cache=cache, cache_pos=pos,
+        hint_heads=rt.hint_heads, hint_kv_seq=rt.hint_kv_seq,
+        flash_decode=rt.flash_decode if rt.mesh is not None else None)
+    x = rt.hint_act(x + h)
+    hin = nfn(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        B, S, D = hin.shape
+        flat = hin.reshape(B * S, D)
+        out = rt.moe_apply(p["moe"], flat, cfg, dtype)
+        h2 = out.reshape(B, S, D)
+    elif cfg.norm == "layernorm":
+        h2 = layers.gelu_mlp(p["mlp"], hin, dtype)
+    else:
+        h2 = layers.glu_mlp(p["mlp"], hin, dtype, cfg.activation)
+    return rt.hint_act(x + h2), new_cache
+
+
+def _rope(cfg, positions):
+    """positions (B, S) or (3, B, S) for mrope -> (cos, sin) (B, S, half)."""
+    if cfg.mrope:
+        return layers.mrope_angles(positions, cfg.hd, cfg.rope_theta,
+                                   cfg.mrope_sections)
+    return layers.rope_angles(positions, cfg.hd, cfg.rope_theta)
+
+
+def _maybe_remat(fn, rt):
+    if rt.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if rt.remat == "dots" else None)
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+# ===========================================================================
+# Forward passes (teacher-forced / prefill)
+
+
+def _embed_inputs(params, batch, cfg, dtype, rt):
+    """-> (x (B,S,D), positions for rope, loss mask)."""
+    tokens = batch["tokens"]
+    x = layers.embed(params["embed"], tokens, dtype)
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    if cfg.family == "vlm":
+        vis = batch["vision_embeds"].astype(dtype)       # (B, Nv, D)
+        x = jnp.concatenate([vis, x], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros(vis.shape[:2], jnp.float32), mask], axis=1)
+        positions = batch["positions3d"]                 # (3, B, S_total)
+    else:
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = rt.hint_act(x)
+    return x, positions, mask
+
+
+def backbone(params, x, positions, cfg, rt, caches=None, pos=None):
+    """Run the stacked layers. caches/pos given -> decode mode (S==1).
+    Returns (hidden, new_caches)."""
+    dtype = _dtype(cfg)
+    fam = cfg.family
+    decode = caches is not None
+
+    if fam in ("dense", "moe", "vlm"):
+        cos_sin = _rope(cfg, positions)
+
+        if decode:
+            def step(h, xs):
+                lp, (K, V) = xs
+                h, nc = _attn_block(lp, h, cos_sin, cfg, rt, dtype,
+                                    cache=(K, V), pos=pos)
+                return h, nc
+            x, new = jax.lax.scan(step, x, (params["layers"], caches))
+            return x, new
+
+        def step(h, lp):
+            h, _ = _attn_block(lp, h, cos_sin, cfg, rt, dtype)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(step, rt), x, params["layers"])
+        return x, None
+
+    if fam == "ssm":
+        def step(h, xs):
+            lp, st = xs
+            _, nfn = _norm(cfg)
+            out, new_st = mamba2.mamba2_forward(
+                lp["mix"], nfn(lp["ln"], h, cfg.norm_eps), cfg, dtype,
+                state=st)
+            return rt.hint_act(h + out), new_st
+        if decode:
+            x, new = jax.lax.scan(step, x, (params["layers"], caches))
+            return x, new
+        def step_nc(h, lp):
+            return step(h, (lp, None))
+        x, states = jax.lax.scan(_maybe_remat(step_nc, rt), x,
+                                 params["layers"])
+        return x, states
+
+    if fam == "hybrid":
+        cos_sin = _rope(cfg, positions)
+        x0 = x  # original embeddings feed every shared-block application
+        shared = params["shared_attn"]
+        _, nfn = _norm(cfg)
+
+        def shared_block(h, kv_cache):
+            hcat = jnp.concatenate([h, x0], axis=-1)
+            hin = layers.dense(shared["in_proj"], hcat, dtype)
+            a, nkv = _attn_block(shared, hin, cos_sin, cfg, rt, dtype,
+                                 cache=kv_cache, pos=pos)
+            return rt.hint_act(h + a), nkv
+
+        def inner(hh, ys):
+            lp, st = ys
+            out, nst = mamba2.mamba2_forward(
+                lp["mix"], nfn(lp["ln"], hh, cfg.norm_eps), cfg,
+                dtype, state=st)
+            return rt.hint_act(hh + out), nst
+
+        if decode:
+            def group(h, xs):
+                gp, ((m_ssm, m_conv), (K, V)) = xs
+                h, nkv = shared_block(h, (K, V))
+                h, (n_ssm, n_conv) = jax.lax.scan(
+                    inner, h, (gp, (m_ssm, m_conv)))
+                return h, ((n_ssm, n_conv), nkv)
+            x, new = jax.lax.scan(group, x, (params["layers"], caches))
+            return x, new
+
+        def group_nc(h, gp):
+            h, _ = shared_block(h, None)
+            def inner_nc(hh, lp):
+                return inner(hh, (lp, None))
+            h, _ = jax.lax.scan(inner_nc, h, gp)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(group_nc, rt), x, params["layers"])
+        return x, None
+
+    raise ValueError(fam)
+
+
+def _final_logits(params, h, cfg, dtype, rt):
+    _, nfn = _norm(cfg)
+    h = nfn(params["ln_f"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], h, dtype)
+    else:
+        logits = layers.dense(params["unembed"], h, dtype)
+    return rt.hint_logits(logits)
+
+
+# ===========================================================================
+# Encoder-decoder (whisper)
+
+
+def _encdec_encode(params, frames, cfg, rt):
+    dtype = _dtype(cfg)
+    _, nfn = _norm(cfg)
+    x = frames.astype(dtype)
+    x = x + params["pos_enc"][: x.shape[1]].astype(dtype)[None]
+    x = rt.hint_act(x)
+
+    def step(h, lp):
+        h, _ = _attn_block(lp, h, None, cfg, rt, dtype, causal=False)
+        return h, None
+    x, _ = jax.lax.scan(_maybe_remat(step, rt), x, params["enc_layers"])
+    return nfn(params["ln_enc"], x, cfg.norm_eps)
+
+
+def _encdec_decode_stack(params, x, enc, cfg, rt, caches=None, pos=None):
+    dtype = _dtype(cfg)
+    _, nfn = _norm(cfg)
+
+    def body(h, lp, kv_cache):
+        h, nc = _attn_block(lp, h, None, cfg, rt, dtype,
+                            cache=kv_cache, pos=pos)
+        xh, _ = layers.attention(
+            lp["xattn"], nfn(lp["ln_x"], h, cfg.norm_eps), None, None,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+            dtype=dtype, kv=enc, hint_heads=rt.hint_heads)
+        h = rt.hint_act(h + xh)
+        return h, nc
+
+    if caches is not None:
+        def step(h, xs):
+            lp, (K, V) = xs
+            return body(h, lp, (K, V))
+        return jax.lax.scan(step, x, (params["dec_layers"], caches))
+
+    def step_nc(h, lp):
+        return body(h, lp, None)
+    x, _ = jax.lax.scan(_maybe_remat(step_nc, rt), x, params["dec_layers"])
+    return x, None
+
+
+# ===========================================================================
+# Public API
+
+
+def loss_fn(params, batch, cfg, rt: Runtime):
+    dtype = _dtype(cfg)
+    if cfg.family == "encdec":
+        enc = _encdec_encode(params, batch["frames"], cfg, rt)
+        tok = batch["tokens"]
+        x = layers.embed(params["embed"], tok, dtype)
+        x = x + params["pos_dec"][: x.shape[1]].astype(dtype)[None]
+        h, _ = _encdec_decode_stack(params, rt.hint_act(x), enc, cfg, rt)
+        logits = _final_logits(params, h, cfg, dtype, rt)
+        return layers.softmax_xent(logits, batch["labels"])
+
+    x, positions, mask = _embed_inputs(params, batch, cfg, dtype, rt)
+    h, _ = backbone(params, x, positions, cfg, rt)
+    if cfg.family == "vlm":
+        nv = batch["vision_embeds"].shape[1]
+        h = h[:, nv:]
+        mask = mask[:, nv:]
+    C = rt.loss_chunk
+    if C and h.shape[1] % C == 0 and h.shape[1] > C:
+        return _chunked_xent(params, h, batch["labels"], mask, cfg, rt, C)
+    logits = _final_logits(params, h, cfg, dtype, rt)
+    return layers.softmax_xent(logits, batch["labels"], mask)
+
+
+def _chunked_xent(params, h, labels, mask, cfg, rt, C):
+    """Cross entropy via a remat'd scan over sequence chunks: the (B, S, V)
+    f32 logits never materialize — peak is one (B, C, V) chunk (§Perf)."""
+    dtype = _dtype(cfg)
+    B, S, D = h.shape
+    nc = S // C
+    hs = jnp.moveaxis(h.reshape(B, nc, C, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, C), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, nc, C), 1, 0)
+
+    def body(carry, xs):
+        hc, lc, mc = xs
+        logits = _final_logits(params, hc, cfg, dtype, rt)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        onehot = jax.nn.one_hot(lc, lf.shape[-1], dtype=jnp.float32)
+        gold = jnp.sum(lf * onehot, axis=-1)
+        nll = ((lse - gold) * mc).sum()
+        return (carry[0] + nll, carry[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def prefill_fn(params, batch, cfg, rt: Runtime):
+    """Teacher-forced forward for serving prefill: returns last-position
+    logits (B, vocab) (+ states for SSM families)."""
+    dtype = _dtype(cfg)
+    if cfg.family == "encdec":
+        enc = _encdec_encode(params, batch["frames"], cfg, rt)
+        tok = batch["tokens"]
+        x = layers.embed(params["embed"], tok, dtype)
+        x = x + params["pos_dec"][: x.shape[1]].astype(dtype)[None]
+        h, _ = _encdec_decode_stack(params, rt.hint_act(x), enc, cfg, rt)
+        return _final_logits(params, h[:, -1:], cfg, dtype, rt), enc
+    x, positions, _ = _embed_inputs(params, batch, cfg, dtype, rt)
+    h, states = backbone(params, x, positions, cfg, rt)
+    return _final_logits(params, h[:, -1:], cfg, dtype, rt), states
+
+
+def init_cache(cfg, batch_size: int, seq_len: int, rt: Runtime,
+               dtype=jnp.bfloat16):
+    """Zeroed decode caches for one-token serve_step lowering."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        shape = (cfg.n_layers, batch_size, seq_len, cfg.n_kv_heads, cfg.hd)
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    if fam == "ssm":
+        h, pd, st = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+        conv_ch = cfg.d_inner + 2 * st
+        return (jnp.zeros((cfg.n_layers, batch_size, h, pd, st), dtype),
+                jnp.zeros((cfg.n_layers, batch_size, cfg.ssm_conv - 1,
+                           conv_ch), dtype))
+    if fam == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        h, pd, st = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+        conv_ch = cfg.d_inner + 2 * st
+        m = (jnp.zeros((groups, cfg.attn_every, batch_size, h, pd, st),
+                       dtype),
+             jnp.zeros((groups, cfg.attn_every, batch_size,
+                        cfg.ssm_conv - 1, conv_ch), dtype))
+        kv = (jnp.zeros((groups, batch_size, seq_len, cfg.n_kv_heads,
+                         cfg.hd), dtype),) * 2
+        return (m, kv)
+    if fam == "encdec":
+        kv = (jnp.zeros((cfg.n_layers, batch_size, seq_len, cfg.n_kv_heads,
+                         cfg.hd), dtype),) * 2
+        enc = jnp.zeros((batch_size, seq_len, cfg.d_model), dtype)
+        return (kv, enc)
+    raise ValueError(fam)
+
+
+def decode_fn(params, cache, batch, cfg, rt: Runtime):
+    """One decode step: batch = {token (B,1), pos (B,)} (+positions3d for
+    vlm). Returns (logits (B,1,V), new cache)."""
+    dtype = _dtype(cfg)
+    tok, pos = batch["token"], batch["pos"]
+    if cfg.family == "encdec":
+        (K, V), enc = cache
+        x = layers.embed(params["embed"], tok, dtype)
+        x = x + jnp.take(params["pos_dec"], pos, axis=0
+                         ).astype(dtype)[:, None, :]
+        h, nkv = _encdec_decode_stack(params, x, enc, cfg, rt,
+                                      caches=(K, V), pos=pos)
+        return _final_logits(params, h, cfg, dtype, rt), (nkv, enc)
+
+    x = layers.embed(params["embed"], tok, dtype)
+    if cfg.family == "vlm":
+        positions = batch["positions3d"]        # (3, B, 1)
+    else:
+        positions = pos[:, None]
+    h, new = backbone(params, x, positions, cfg, rt, caches=cache, pos=pos)
+    return _final_logits(params, h, cfg, dtype, rt), new
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

@@ -1,0 +1,158 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Implements the chunked SSD algorithm: within a chunk the recurrence is
+evaluated in its dual quadratic-attention form (MXU matmuls over the
+1-semiseparable mask), across chunks a linear recurrence carries the
+(heads, headdim, state) chunk states. Decode is the O(1) recurrent update.
+
+Single group (B/C shared across heads), matching the published 130m config.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+
+
+def mamba2_init(rng, cfg):
+    d, di, st, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * st
+    ks = jax.random.split(rng, 4)
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di + 2 * st + h),
+        "conv_w": layers._init(ks[1], (cfg.ssm_conv, conv_ch),
+                               1.0 / np.sqrt(cfg.ssm_conv)),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": layers.rmsnorm_init(di),
+        "out_proj": layers.dense_init(ks[2], di, d),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """(..., l) -> (..., l, l) with out[i, j] = sum_{j<k<=i} x[k], -inf above
+    the diagonal (the 1-SS decay mask in log space)."""
+    l = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. xBC (B,S,C), w (K,C). Returns (out, new_state)
+    where state is the trailing K-1 inputs for streaming decode."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1], :] * w[i].astype(xBC.dtype)
+              for i in range(K))
+    out = out + b.astype(xBC.dtype)
+    new_state = xp[:, -(K - 1):, :]
+    return out, new_state
+
+
+def _split(p, u, cfg, dtype):
+    di, st, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = layers.dense(p["in_proj"], u, dtype)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * st]
+    dt = zxbcdt[..., di + di + 2 * st:]
+    return z, xBC, dt
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+    x (b,s,h,p); dt (b,s,h); A (h,); Bm/Cm (b,s,n). Returns (y, final_state
+    (b,h,p,n))."""
+    b, s, h, pdim = x.shape
+    n = Bm.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, pdim)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+
+    dA = dtc.astype(jnp.float32) * A[None, None, None, :]  # (b,c,l,h) log
+    xdt = xc * dtc[..., None].astype(x.dtype)
+
+    # intra-chunk (dual quadratic form)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, 2)))   # (b,c,h,l,l)
+    CB = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)      # (b,c,l,l)
+    y_diag = jnp.einsum("bchlm,bclm,bcmhp->bclhp",
+                        L.astype(x.dtype), CB.astype(x.dtype), xdt)
+
+    # chunk states
+    cum = jnp.cumsum(dA, axis=2)                    # (b,c,l,h)
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)    # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        Bc, decay_out.astype(x.dtype), xdt)
+
+    # inter-chunk recurrence: scan over chunks
+    tot = cum[:, :, -1, :]                          # (b,c,h)
+
+    def scan_fn(carry, inp):
+        st_in, (st_c, tot_c) = carry, inp
+        new = st_in * jnp.exp(tot_c)[:, :, None, None].astype(x.dtype) + st_c
+        return new, st_in                            # emit state BEFORE chunk
+
+    init = (jnp.zeros((b, h, pdim, n), x.dtype) if init_state is None
+            else init_state.astype(x.dtype))
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(tot, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)   # (b,c,h,p,n)
+
+    decay_in = jnp.exp(cum)                          # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       Cc, prev_states, decay_in.astype(x.dtype))
+    y = (y_diag + y_off).reshape(b, s, h, pdim)
+    return y, final
+
+
+def mamba2_forward(p, u, cfg, dtype,
+                   state: Optional[Tuple] = None):
+    """u (B,S,d). state = (ssm_state (B,h,p,n), conv_state) for streaming.
+    Returns (out (B,S,d), new_state)."""
+    di, st, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_headdim
+    z, xBC, dt = _split(p, u, cfg, dtype)
+    conv_in = None if state is None else state[1]
+    xBC, conv_out = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_in)
+    xBC = jax.nn.silu(xBC)
+    x = xBC[..., :di].reshape(u.shape[0], u.shape[1], h, pdim)
+    Bm = xBC[..., di:di + st]
+    Cm = xBC[..., di + st:]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    ssm_in = None if state is None else state[0]
+
+    if u.shape[1] == 1 and state is not None:
+        # recurrent decode step
+        dA = jnp.exp(dtv[:, 0, :] * A[None, :])             # (B,h)
+        inc = jnp.einsum("bn,bhp->bhpn", Bm[:, 0].astype(dtype),
+                         (x[:, 0] * dtv[:, 0, :, None].astype(dtype)))
+        new_ssm = ssm_in * dA[:, :, None, None].astype(dtype) + inc
+        y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cm[:, 0].astype(dtype))
+        y = y[:, None]                                       # (B,1,h,p)
+        final = new_ssm
+    else:
+        y, final = ssd_chunked(x, dtv, A, Bm, Cm, cfg.ssm_chunk, ssm_in)
+    y = y + x * p["D"].astype(dtype)[None, None, :, None]
+    y = y.reshape(u.shape[0], u.shape[1], di)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = layers.dense(p["out_proj"], y, dtype)
+    return out, (final, conv_out)

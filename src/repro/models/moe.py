@@ -1,0 +1,213 @@
+"""Mixture-of-Experts FFN with top-k routing and sort-based dispatch.
+
+Production path (under ``shard_map``): experts are sharded over the mesh's
+``data`` axis (expert parallelism) with tokens exchanged via two
+``all_to_all`` hops, and each expert's FFN dims sharded over the ``model``
+axis (tensor parallelism inside the expert, closed by a ``psum``). Capacity
+is static (``moe_capacity_factor``); overflowing tokens are dropped, the
+standard GShard/Switch discipline.
+
+Local path (single device / smoke tests): identical math with the exchange
+elided (ep = 1).
+
+Expert-count padding: if ``n_experts`` does not divide the EP axis (e.g.
+granite's 40 experts on a 16-way axis), experts are padded to the next
+multiple; padded experts get ``-inf`` router logits and are never routed to.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+
+
+def padded_experts(n_experts: int, ep: int) -> int:
+    return int(np.ceil(n_experts / ep) * ep)
+
+
+def moe_init(rng, cfg, ep: int = 1):
+    e_pad = padded_experts(cfg.n_experts, ep)
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 4)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(f)
+    return {
+        "router": layers._init(ks[0], (d, e_pad), s_in),
+        "wi": layers._init(ks[1], (e_pad, d, f), s_in),
+        "wg": layers._init(ks[2], (e_pad, d, f), s_in),
+        "wo": layers._init(ks[3], (e_pad, f, d), s_out),
+    }
+
+
+def moe_ffn(
+    p, x: jnp.ndarray, cfg, dtype,
+    ep_axis: Optional[str] = None,
+    tp_axis: Optional[str] = None,
+) -> jnp.ndarray:
+    """x: (T, d) local tokens -> (T, d). Under shard_map, ``ep_axis`` names
+    the expert-parallel mesh axis and ``tp_axis`` the tensor-parallel one."""
+    T, d = x.shape
+    k = cfg.top_k
+    e_pad = p["router"].shape[1]
+    ep = jax.lax.psum(1, ep_axis) if ep_axis else 1
+    e_loc = p["wi"].shape[0]           # experts held locally (= e_pad / ep)
+
+    # ---- routing (replicated across tp_axis: same tokens -> same result) --
+    logits = (x @ p["router"].astype(dtype)).astype(jnp.float32)
+    emask = jnp.arange(e_pad) < cfg.n_experts
+    logits = jnp.where(emask[None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)              # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(-1)                          # (T*k,) token-major
+    flat_t = jnp.arange(T * k, dtype=jnp.int32) // k
+
+    # ---- dispatch to expert shards -----------------------------------------
+    dest = flat_e // e_loc                             # owning EP shard
+    order = jnp.argsort(dest, stable=True)
+    dest_s = dest[order]
+    counts = jnp.bincount(dest, length=ep)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * k) - starts[dest_s]
+    c_send = int(np.ceil(T * k / ep * cfg.moe_capacity_factor))
+    keep = rank < c_send
+    slot = jnp.where(keep, dest_s * c_send + rank, 0).astype(jnp.int32)
+
+    xs = x.astype(dtype)[flat_t[order]] * keep[:, None].astype(dtype)
+    send_x = jnp.zeros((ep * c_send, d), dtype).at[slot].add(
+        jnp.where(keep[:, None], xs, 0))
+    send_e = jnp.full((ep * c_send,), -1, jnp.int32).at[slot].max(
+        jnp.where(keep, flat_e[order], -1))
+
+    if ep_axis:
+        recv_x = jax.lax.all_to_all(send_x.reshape(ep, c_send, d),
+                                    ep_axis, 0, 0).reshape(ep * c_send, d)
+        recv_e = jax.lax.all_to_all(send_e.reshape(ep, c_send),
+                                    ep_axis, 0, 0).reshape(ep * c_send)
+        my = jax.lax.axis_index(ep_axis) * e_loc
+    else:
+        recv_x, recv_e, my = send_x, send_e, 0
+
+    # ---- group received tokens by local expert -----------------------------
+    R = ep * c_send
+    lidx = recv_e - my
+    valid = (recv_e >= 0) & (lidx >= 0) & (lidx < e_loc)
+    gkey = jnp.where(valid, lidx, e_loc)
+    order2 = jnp.argsort(gkey, stable=True)
+    gkey_s = gkey[order2]
+    counts2 = jnp.bincount(gkey, length=e_loc + 1)
+    starts2 = jnp.concatenate([jnp.zeros(1, counts2.dtype),
+                               jnp.cumsum(counts2)[:-1]])
+    rank2 = jnp.arange(R) - starts2[gkey_s]
+    c_loc = min(R, int(np.ceil(R / max(e_loc, 1)
+                               * cfg.moe_capacity_factor)))
+    keep2 = (rank2 < c_loc) & (gkey_s < e_loc)
+    erow = jnp.where(keep2, gkey_s, 0).astype(jnp.int32)
+    crow = jnp.where(keep2, rank2, 0).astype(jnp.int32)
+
+    buf = jnp.zeros((e_loc, c_loc, d), dtype).at[erow, crow].add(
+        jnp.where(keep2[:, None], recv_x[order2], 0))
+
+    # ---- expert FFN (GLU); ff dim may be TP-sharded ------------------------
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.activation]
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(dtype))) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(dtype))
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dtype))
+    if tp_axis:
+        y = jax.lax.psum(y, tp_axis)
+
+    # ---- return trip + combine ---------------------------------------------
+    y_rows = jnp.zeros((R, d), dtype).at[order2].add(
+        jnp.where(keep2[:, None], y[erow, crow], 0))
+    if ep_axis:
+        y_back = jax.lax.all_to_all(y_rows.reshape(ep, c_send, d),
+                                    ep_axis, 0, 0).reshape(ep * c_send, d)
+    else:
+        y_back = y_rows
+    y_pairs = jnp.zeros((T * k, d), dtype).at[order].add(
+        jnp.where(keep[:, None], y_back[slot], 0))
+    out = (y_pairs.reshape(T, k, d)
+           * gates.astype(dtype)[..., None]).sum(axis=1)
+    return out
+
+
+def moe_ffn_ep_replicated(p, x: jnp.ndarray, cfg, dtype,
+                          ep_axis: str) -> jnp.ndarray:
+    """Expert parallelism over an axis where the TOKENS ARE REPLICATED
+    (the TP axis of a standard Megatron layout).
+
+    Because every EP peer already holds every token, dispatch needs NO
+    all-to-all: each peer locally selects the (token, slot) pairs routed to
+    its resident experts, runs them through full-ff experts, and the combine
+    is ONE psum. ICI per layer drops from O(T·d) a2a x2 (and x TP-degree
+    redundancy) to a single O(T·d) all-reduce. Only viable when one expert's
+    full FFN fits a chip (granite: 2.4M params/expert) — phi3.5-scale
+    experts keep the a2a path (moe_ffn)."""
+    T, d = x.shape
+    k = cfg.top_k
+    e_pad = p["router"].shape[1]
+    e_loc = p["wi"].shape[0]
+    row = jax.lax.axis_index(ep_axis)
+    my0 = row * e_loc
+
+    logits = (x @ p["router"].astype(dtype)).astype(jnp.float32)
+    emask = jnp.arange(e_pad) < cfg.n_experts
+    logits = jnp.where(emask[None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(-1)
+    flat_t = jnp.arange(T * k, dtype=jnp.int32) // k
+    lidx = flat_e - my0
+    mine = (lidx >= 0) & (lidx < e_loc)
+
+    # group my pairs by local expert with static capacity
+    gkey = jnp.where(mine, lidx, e_loc)
+    order = jnp.argsort(gkey, stable=True)
+    gkey_s = gkey[order]
+    counts = jnp.bincount(gkey, length=e_loc + 1)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * k) - starts[gkey_s]
+    c_loc = int(np.ceil(T * k / max(e_pad, 1) * cfg.moe_capacity_factor))
+    keep = (rank < c_loc) & (gkey_s < e_loc)
+    erow = jnp.where(keep, gkey_s, 0).astype(jnp.int32)
+    crow = jnp.where(keep, rank, 0).astype(jnp.int32)
+
+    xs = x.astype(dtype)[flat_t[order]]
+    buf = jnp.zeros((e_loc, c_loc, d), dtype).at[erow, crow].add(
+        jnp.where(keep[:, None], xs, 0))
+
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.activation]
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(dtype))) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(dtype))
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dtype))
+
+    # scatter back to (token, slot) pairs, weight by gate, partial-sum
+    y_pairs = jnp.zeros((T * k, d), dtype).at[order].add(
+        jnp.where(keep[:, None], y[erow, crow], 0))
+    out = (y_pairs.reshape(T, k, d)
+           * gates.astype(dtype)[..., None]).sum(axis=1)
+    return jax.lax.psum(out, ep_axis)
+
+
+def aux_load_balance_loss(p, x, cfg, dtype) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * Σ_e f_e·P_e (fraction routed ×
+    mean router prob). Encourages uniform expert load."""
+    logits = (x @ p["router"].astype(dtype)).astype(jnp.float32)
+    e_pad = logits.shape[-1]
+    emask = jnp.arange(e_pad) < cfg.n_experts
+    logits = jnp.where(emask[None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, eidx = jax.lax.top_k(probs, cfg.top_k)
+    f = jnp.zeros(e_pad).at[eidx.reshape(-1)].add(1.0) / eidx.size
+    pbar = probs.mean(0)
+    return cfg.n_experts * jnp.sum(f * pbar)

@@ -1,0 +1,103 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule,
+and optional error-feedback int8 gradient compression (for cross-pod
+all-reduce bandwidth reduction).
+
+States are plain pytrees sharded like the parameters (optimizer sharding =
+ZeRO-style for free under pjit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    compress_grads: bool = False   # int8 error-feedback compression
+
+
+def init_state(params, cfg: AdamWConfig):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    state = {"mu": zeros, "nu": jax.tree.map(jnp.zeros_like, params),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg.compress_grads:
+        state["ef"] = jax.tree.map(jnp.zeros_like, params)
+    return state
+
+
+def schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def compress_int8(g, ef):
+    """Error-feedback int8 quantization: quantize (g + carry), carry the
+    residual. Emulates compressed cross-replica gradient exchange."""
+    x = g + ef
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, x - deq
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    lr = schedule(step, cfg)
+
+    if cfg.compress_grads:
+        pairs = jax.tree.map(compress_int8, grads, state["ef"])
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda p: p[1], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_ef = None
+
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12))
+    b1, b2 = cfg.beta1, cfg.beta2
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / (1 - b1 ** step)
+        nu_hat = nu / (1 - b2 ** step)
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled decay on matrices only
+            delta = delta + cfg.weight_decay * p
+        return (p - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}

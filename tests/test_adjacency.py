@@ -1,0 +1,34 @@
+"""Cross-segment adjacency completion vs the global brute force."""
+
+import numpy as np
+import pytest
+
+from repro.core.adjacency import complete_adjacency
+from repro.core.engine import RelationEngine
+from repro.core.explicit import ExplicitTriangulation
+from repro.core.mesh import segment_mesh
+from repro.core.segtables import precondition
+from repro.data.meshgen import structured_grid
+
+
+@pytest.fixture(scope="module")
+def setup():
+    mesh = structured_grid(7, 7, 6, jitter=0.2, seed=3)
+    sm = segment_mesh(mesh, capacity=16)  # small segments -> many boundaries
+    pre = precondition(sm, relations=["EE", "FF", "TT", "EF", "FT"])
+    eng = RelationEngine(pre, ["EE", "FF", "TT"], cache_segments=4096)
+    ex = ExplicitTriangulation(pre, ["EE", "FF", "TT"])
+    return sm, pre, eng, ex
+
+
+@pytest.mark.parametrize("relation", ["EE", "FF", "TT"])
+def test_completed_adjacency_matches_global(setup, relation):
+    sm, pre, eng, ex = setup
+    n = {"E": pre.n_edges, "F": pre.n_faces, "T": sm.n_tets}[relation[0]]
+    ids = np.unique(np.linspace(0, n - 1, 60, dtype=np.int64))
+    M, L = complete_adjacency(eng, relation, ids)
+    Me, Le = ex.rows(relation, ids)
+    for i in range(len(ids)):
+        got = set(M[i][: L[i]])
+        want = set(Me[i][: Le[i]])
+        assert got == want, (relation, int(ids[i]), got ^ want)

@@ -1,0 +1,126 @@
+"""Engine behaviour: multi-queue accounting, lookahead, LRU eviction,
+boundary relations, baselines, and waiting-time stats plumbing."""
+
+import numpy as np
+import pytest
+
+from repro.algorithms import fields
+from repro.core.engine import RelationEngine
+from repro.core.explicit import (ActopoDS, ExplicitTriangulation,
+                                 TopoClusterDS)
+from repro.core.mesh import segment_mesh
+from repro.core.segtables import precondition
+from repro.data.meshgen import structured_grid, two_tets
+
+
+@pytest.fixture(scope="module")
+def setup():
+    mesh = structured_grid(8, 8, 8, scalar_fn=fields.gaussians(1, k=3,
+                                                               sigma=3.0))
+    sm = segment_mesh(mesh, capacity=32)
+    pre = precondition(sm, relations=["VV", "VT", "VE", "VF", "EF", "ET",
+                                      "FT"])
+    return sm, pre
+
+
+def test_lookahead_precomputes_ahead(setup):
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV"], lookahead=4, cache_segments=256)
+    eng.get("VV", 0)
+    # segments 1..4 were produced proactively -> hits, no new launch
+    launches = eng.stats.kernel_launches
+    for s in (1, 2, 3, 4):
+        eng.get("VV", s)
+    assert eng.stats.kernel_launches == launches
+    assert eng.stats.cache_hits >= 4
+
+
+def test_lru_eviction(setup):
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV"], lookahead=0, batch_max=1,
+                         cache_segments=2)
+    for s in range(5):
+        eng.get("VV", s)
+    assert len(eng.cache) <= 2
+    assert eng.cache.evictions >= 3
+    # re-fetch of evicted segment still correct
+    M, L = eng.get("VV", 0)
+    ex = ExplicitTriangulation(pre, ["VV"])
+    Me, Le = ex.get("VV", 0)
+    assert (L == Le).all()
+
+
+def test_multi_queue_isolation(setup):
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV", "VT"], lookahead=0)
+    eng.request("VV", [1, 2])
+    eng.request("VT", [3])
+    assert eng.queues["VV"] == [1, 2]
+    assert eng.queues["VT"] == [3]
+    eng.get("VT", 3)
+    assert eng.queues["VT"] == []
+    assert eng.queues["VV"] == [1, 2]  # untouched (per-relation queues)
+
+
+def test_boundary_relations_direct(setup):
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV"], lookahead=0)
+    # FE: each face's 3 edges exist and connect its vertices
+    fe = eng.boundary_FE(np.arange(20))
+    assert (fe >= 0).all()
+    for f in range(20):
+        verts = set(pre.F[f])
+        for e in fe[f]:
+            assert set(pre.E[e]) <= verts
+    te = eng.boundary_TE(np.arange(10))
+    tf = eng.boundary_TF(np.arange(10))
+    assert (te >= 0).all() and (tf >= 0).all()
+    launches = eng.stats.kernel_launches
+    assert launches == 0  # boundary relations never touch the producer
+
+
+def test_baselines_agree(setup):
+    sm, pre = setup
+    ex = ExplicitTriangulation(pre, ["VT"])
+    for ds in (TopoClusterDS(pre, ["VT"]), ActopoDS(pre, ["VT"])):
+        for k in (0, sm.n_segments // 2, sm.n_segments - 1):
+            M, L = ds.get("VT", k)
+            Me, Le = ex.get("VT", k)
+            assert (L == Le).all()
+            for r in range(len(L)):
+                assert set(M[r][: L[r]]) == set(Me[r][: Le[r]])
+
+
+def test_waiting_stats_populated(setup):
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV"], lookahead=2)
+    for s in range(min(8, sm.n_segments)):
+        eng.get("VV", s)
+    st = eng.stats
+    assert st.requests >= 8
+    assert st.t_kernel > 0 and st.t_integrate >= 0
+    assert st.segments_produced >= st.cache_misses
+
+
+def test_no_relation_overflow(setup):
+    """Default relation-array widths hold the densest rows (paper's
+    preallocated M arrays must never overflow)."""
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV", "VT", "VE", "VF", "EF", "ET", "FT"])
+    for R in ("VV", "VT", "VE", "VF", "EF", "ET", "FT"):
+        for k in range(0, sm.n_segments, 7):
+            M, L = eng.get(R, k)
+            assert L.max(initial=0) <= M.shape[1], (R, k)
+
+
+def test_toy_matches_paper_figure(setup):
+    """Fig. 1: VV(v0) on the toy mesh (labels modulo canonicalization)."""
+    mesh = two_tets()
+    sm = segment_mesh(mesh, capacity=6)
+    pre = precondition(sm, relations=["VV"])
+    eng = RelationEngine(pre, ["VV"])
+    M, L = eng.get("VV", 0)
+    # the vertex with scalar 2.0 (paper's v0) neighbours scalars {4,5,1,0}
+    v0 = int(np.argmin(np.abs(sm.scalars - 2.0)))
+    nbrs = {round(float(sm.scalars[u]), 1) for u in M[v0][: L[v0]]}
+    assert nbrs == {4.0, 5.0, 1.0, 0.0}

@@ -1,0 +1,53 @@
+"""Flash-attention Pallas kernel vs the jnp oracle (interpret mode):
+shape/dtype/GQA/causality/block sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.layers import _sdpa, repeat_kv
+
+
+def _oracle(q, k, v, causal):
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool))[None, None]
+    else:
+        mask = jnp.ones((1, 1, S, T), bool)
+    return _sdpa(q, repeat_kv(k, H), repeat_kv(v, H), mask, q.dtype)
+
+
+@pytest.mark.parametrize("B,S,T,H,KV,hd,causal,dtype", [
+    (2, 128, 128, 4, 4, 64, True, jnp.float32),
+    (1, 256, 256, 4, 2, 64, True, jnp.float32),
+    (2, 128, 128, 8, 1, 128, True, jnp.bfloat16),
+    (1, 128, 256, 4, 4, 64, False, jnp.float32),
+    (1, 128, 128, 2, 2, 256, True, jnp.float32),
+])
+def test_flash_matches_oracle(B, S, T, H, KV, hd, causal, dtype):
+    rng = np.random.default_rng(S + H)
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, T, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, T, KV, hd)), dtype)
+    got = flash_attention(q, k, v, causal=causal, interpret=True,
+                          q_blk=64, k_blk=64)
+    want = _oracle(q, k, v, causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("q_blk,k_blk", [(32, 128), (128, 32), (64, 64)])
+def test_flash_block_sweep(q_blk, k_blk):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (1, 128, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 128, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 128, 2, 64)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, interpret=True,
+                          q_blk=q_blk, k_blk=k_blk)
+    want = _oracle(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,94 @@
+"""Hypothesis property tests on the system's invariants: mesh/segmentation
+canonicalization, relation symmetry/duality, Euler characteristic of the
+discrete gradient, and engine-vs-explicit agreement on random meshes."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.algorithms.critical_points import total_order
+from repro.algorithms.discrete_gradient import discrete_gradient
+from repro.core.engine import RelationEngine
+from repro.core.explicit import ExplicitTriangulation
+from repro.core.mesh import segment_mesh
+from repro.core.segtables import precondition
+from repro.data.meshgen import structured_grid
+
+dims = st.integers(min_value=3, max_value=6)
+caps = st.sampled_from([4, 16, 64])
+
+
+def _mesh(nx, ny, nz, seed):
+    rng = np.random.default_rng(seed)
+
+    def field(p):
+        return rng.normal(size=len(p)).astype(np.float32)
+    return structured_grid(nx, ny, nz, scalar_fn=field,
+                           jitter=0.1 * (seed % 2), seed=seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(nx=dims, ny=dims, nz=dims, cap=caps, seed=st.integers(0, 99))
+def test_segmentation_partitions_vertices(nx, ny, nz, cap, seed):
+    sm = segment_mesh(_mesh(nx, ny, nz, seed), capacity=cap)
+    assert sm.I_V[0] == 0 and sm.I_V[-1] == sm.n_vertices
+    assert (np.diff(sm.I_V) >= 0).all() and (np.diff(sm.I_V) <= cap).all()
+    # owner of each tet = segment of its min vertex; tets sorted by owner
+    owner = sm.seg_of_vertex[sm.tets[:, 0]]
+    assert (np.diff(owner) >= 0).all()
+    # rows sorted ascending
+    assert (np.diff(sm.tets, axis=1) > 0).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(nx=dims, ny=dims, nz=dims, seed=st.integers(0, 99))
+def test_vv_symmetry_and_euler_counts(nx, ny, nz, seed):
+    sm = segment_mesh(_mesh(nx, ny, nz, seed), capacity=16)
+    pre = precondition(sm, relations=["VV", "VE", "VF", "VT"])
+    ex = ExplicitTriangulation(pre, ["VV"])
+    M, L = ex.rel["VV"]
+    # symmetry: u in VV(v) <=> v in VV(u)
+    for v in range(0, sm.n_vertices, max(1, sm.n_vertices // 17)):
+        for u in M[v][: L[v]]:
+            assert v in M[u][: L[u]]
+    # simplex-count consistency: sum of VE degrees = 2|E| etc.
+    exp2 = ExplicitTriangulation(pre, ["VE", "VF", "VT"])
+    assert exp2.rel["VE"][1].sum() == 2 * pre.n_edges
+    assert exp2.rel["VF"][1].sum() == 3 * pre.n_faces
+    assert exp2.rel["VT"][1].sum() == 4 * sm.n_tets
+
+
+@settings(max_examples=4, deadline=None)
+@given(n=st.integers(4, 6), seed=st.integers(0, 20), cap=caps)
+def test_morse_euler_characteristic(n, seed, cap):
+    """Alternating sum of critical cells equals chi for any field."""
+    sm = segment_mesh(_mesh(n, n, n, seed), capacity=cap)
+    pre = precondition(sm, relations=["VE", "VF", "VT"])
+    rank = total_order(sm.scalars)
+    eng = RelationEngine(pre, ["VE", "VF", "VT"], lookahead=2)
+    g = discrete_gradient(eng, pre, rank, batch_segments=8)
+    chi = sm.n_vertices - pre.n_edges + pre.n_faces - sm.n_tets
+    assert g.euler() == chi
+    # pairing partitions every dimension
+    assert (g.pair_v2e >= 0).sum() + g.crit_v.sum() == sm.n_vertices
+    assert ((g.pair_e2v >= 0).sum() + (g.pair_e2f >= 0).sum()
+            + g.crit_e.sum() == pre.n_edges)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 50), lookahead=st.integers(0, 8),
+       cache=st.sampled_from([4, 64, 1024]))
+def test_engine_policy_invariance(seed, lookahead, cache):
+    """Relation results are identical for ANY engine policy (lookahead,
+    cache size, batching) — scheduling must never change answers."""
+    sm = segment_mesh(_mesh(5, 5, 4, seed), capacity=16)
+    pre = precondition(sm, relations=["VV", "VT"])
+    base = RelationEngine(pre, ["VV", "VT"], lookahead=4, cache_segments=512)
+    eng = RelationEngine(pre, ["VV", "VT"], lookahead=lookahead,
+                         cache_segments=cache, batch_max=3)
+    for k in range(sm.n_segments):
+        for R in ("VV", "VT"):
+            Ma, La = base.get(R, k)
+            Mb, Lb = eng.get(R, k)
+            assert (La == Lb).all()
+            for r in range(len(La)):
+                assert set(Ma[r][: La[r]]) == set(Mb[r][: Lb[r]])

@@ -1,0 +1,30 @@
+"""Fused pipeline mode agrees with the reactive engine's critical points."""
+
+import numpy as np
+
+from repro.algorithms import fields
+from repro.algorithms.critical_points import (MAXIMUM, MINIMUM,
+                                              critical_points, total_order)
+from repro.core.engine import RelationEngine
+from repro.core.mesh import segment_mesh
+from repro.core.pipeline import fused_extrema
+from repro.core.segtables import precondition
+from repro.data.meshgen import structured_grid
+
+
+def test_fused_pipeline_matches_engine():
+    mesh = structured_grid(9, 9, 9,
+                           scalar_fn=fields.gaussians(5, k=4, sigma=3.0,
+                                                      scale=9))
+    sm = segment_mesh(mesh, capacity=32)
+    pre = precondition(sm, relations=["VV", "VT"])
+    rank = total_order(sm.scalars)
+
+    eng = RelationEngine(pre, ["VV", "VT"])
+    types, _ = critical_points(eng, pre, rank)
+    want_min = np.sort(np.nonzero(types == MINIMUM)[0])
+    want_max = np.sort(np.nonzero(types == MAXIMUM)[0])
+
+    got_min, got_max = fused_extrema(pre, rank, batch=4)
+    np.testing.assert_array_equal(got_min, want_min)
+    np.testing.assert_array_equal(got_max, want_max)
