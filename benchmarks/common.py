@@ -40,7 +40,8 @@ def make_ds(kind: str, pre, relations, **kw):
                               batch_max=kw.get("batch_max", 64),
                               cache_segments=kw.get("cache_segments", 1024),
                               block_x=kw.get("block_x", 256),
-                              block_y=kw.get("block_y", 256))
+                              block_y=kw.get("block_y", 256),
+                              async_dispatch=kw.get("async_dispatch", True))
     if kind == "actopo":
         return ActopoDS(pre, relations,
                         lookahead=kw.get("lookahead", 8),

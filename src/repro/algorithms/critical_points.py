@@ -124,13 +124,26 @@ def critical_points(
     rank_dev = jnp.asarray(rank)
     types = np.empty(sm.n_vertices, dtype=np.int32)
 
-    for b0 in range(0, ns, batch_segments):
-        segs = list(range(b0, min(b0 + batch_segments, ns)))
-        if lookahead_hint and hasattr(ds, "prefetch"):
-            nxt = [s for s in range(segs[-1] + 1,
-                                    min(segs[-1] + 1 + len(segs), ns))]
+    def _prefetch_batch(b0):
+        """Dispatch the producer for batch [b0, b0+batch) without blocking."""
+        if not (lookahead_hint and hasattr(ds, "prefetch")):
+            return
+        nxt = list(range(b0, min(b0 + batch_segments, ns)))
+        if not nxt:
+            return
+        if hasattr(ds, "prefetch_many"):
+            ds.prefetch_many({"VV": nxt, "VT": nxt})
+        else:
             for R in ("VV", "VT"):
                 ds.prefetch(R, nxt)
+
+    _prefetch_batch(0)  # prime the pipeline before the first consume
+    for b0 in range(0, ns, batch_segments):
+        segs = list(range(b0, min(b0 + batch_segments, ns)))
+        # issue batch k+1 to the producer BEFORE consuming batch k, so its
+        # kernels execute behind the classification below (engine-level
+        # analogue of core/pipeline.py's fused produce/consume scan)
+        _prefetch_batch(b0 + batch_segments)
         vv = ds.get_batch("VV", segs) if hasattr(ds, "get_batch") else [
             ds.get("VV", s) for s in segs]
         vt = ds.get_batch("VT", segs) if hasattr(ds, "get_batch") else [

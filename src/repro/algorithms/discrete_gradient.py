@@ -221,12 +221,27 @@ def discrete_gradient(
         crit_f=np.zeros(nf, bool), crit_t=np.zeros(nt, bool))
 
     ns = sm.n_segments
-    for b0 in range(0, ns, batch_segments):
-        segs = list(range(b0, min(b0 + batch_segments, ns)))
-        if hasattr(ds, "prefetch"):
-            nxt = list(range(segs[-1] + 1, min(segs[-1] + 1 + len(segs), ns)))
+
+    def _prefetch_batch(b0):
+        """Dispatch VE/VF/VT production for the next batch without blocking
+        (three kernels in flight round-robin — the paper's 3-queue config)."""
+        if not hasattr(ds, "prefetch"):
+            return
+        nxt = list(range(b0, min(b0 + batch_segments, ns)))
+        if not nxt:
+            return
+        if hasattr(ds, "prefetch_many"):
+            ds.prefetch_many({R: nxt for R in ("VE", "VF", "VT")})
+        else:
             for R in ("VE", "VF", "VT"):
                 ds.prefetch(R, nxt)
+
+    _prefetch_batch(0)  # prime the pipeline before the first consume
+    for b0 in range(0, ns, batch_segments):
+        segs = list(range(b0, min(b0 + batch_segments, ns)))
+        # batch k+1 dispatched before batch k is consumed: the lower-star
+        # state machines below overlap the next batch's relation kernels
+        _prefetch_batch(b0 + batch_segments)
         blocks = {R: ds.get_batch(R, segs) for R in ("VE", "VF", "VT")}
         degs = {R: -32 * (-max(M.shape[1] for M, _ in blocks[R]) // 32)
                 for R in blocks}

@@ -70,11 +70,14 @@ def _gather_ft(ds, pre, batch_segments: int = 16) -> np.ndarray:
     nf = pre.n_faces
     ft = np.full((nf, 2), -1, dtype=np.int64)
     ns = pre.smesh.n_segments
+    if hasattr(ds, "prefetch"):  # prime the pipeline before the first consume
+        ds.prefetch("FT", list(range(0, min(batch_segments, ns))))
     for b0 in range(0, ns, batch_segments):
         segs = list(range(b0, min(b0 + batch_segments, ns)))
+        # batch k+1 dispatched before batch k is integrated below
         if hasattr(ds, "prefetch"):
-            ds.prefetch("FT", list(range(segs[-1] + 1,
-                                         min(segs[-1] + 1 + len(segs), ns))))
+            ds.prefetch("FT", list(range(b0 + batch_segments,
+                                         min(b0 + 2 * batch_segments, ns))))
         for s, (M, L) in zip(segs, ds.get_batch("FT", segs)):
             lo = int(pre.I_F[s])
             n = M.shape[0]

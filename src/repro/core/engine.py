@@ -6,20 +6,39 @@ Roles, mapped from the paper:
   consumer        -> the analysis algorithm calling :meth:`get` /
                      :meth:`get_batch` (and the boundary-relation helpers,
                      which never touch the accelerator — paper §4.4)
-  leader producer -> :meth:`_produce`: drains the per-relation queue
+  leader producer -> :meth:`_dispatch`: drains the per-relation queue
                      (multi-queue design, §4.5), extends the batch with
                      *lookahead* segments along the traversal order (the
                      paper's ``n_b·t_b/t_s`` proactive precompute), and
                      launches ONE batched kernel per relation type
   worker producer -> the Pallas grid (``kernels/segment_relations.py``)
 
-Asynchrony: JAX dispatch is asynchronous — the produced relation arrays are
-futures; the consumer only blocks when it actually reads a block that is
-still being computed. This is the TPU-native realization of "producers run
-ahead of consumers" without host thread pools.
+Asynchronous consumer contract
+------------------------------
+
+With ``async_dispatch=True`` (the default) the producer NEVER blocks: a
+kernel launch returns immediately and its not-yet-ready device arrays are
+recorded in an **in-flight futures table** keyed by ``(relation, segment)``.
+
+  - :meth:`prefetch` / :meth:`prefetch_many` enqueue traversal-order hints
+    and dispatch launches round-robin across relations (several relation
+    kernels in flight at once), returning immediately.
+  - :meth:`get` / :meth:`get_batch` block only when they read a block that
+    is still computing; the wait is accounted in ``stats.t_sync`` (the
+    paper's Fig. 10 "waiting" metric). ``stats.t_kernel`` records only the
+    host-side dispatch cost, so ``t_sync`` vs ``t_kernel`` quantifies how
+    much of the kernel execution was hidden behind consumer work.
+  - A segment is never produced twice: requests are de-duplicated against
+    the cache, the in-flight table, and the pending queues.
+
+With ``async_dispatch=False`` every launch is synced immediately after
+dispatch (the pre-async blocking behaviour, used by the ACTOPO/TopoCluster
+baselines); the wait still lands in ``t_sync`` so the two modes are
+directly comparable.
 
 The engine also keeps the paper's accounting (Table 5/6/7): per-phase wait
-times (enqueue / queue / prepare / kernel / integrate) and cache statistics.
+times (enqueue / queue / prepare / kernel dispatch / sync / integrate) and
+cache statistics.
 """
 
 from __future__ import annotations
@@ -49,13 +68,15 @@ class EngineStats:
     kernel_launches: int = 0
     segments_produced: int = 0
     cache_hits: int = 0
+    inflight_hits: int = 0   # subset of cache_hits served from in-flight
     cache_misses: int = 0
     evictions: int = 0
     # Waiting-time breakdown (seconds), paper Fig. 10 phases.
     t_enqueue: float = 0.0
     t_queue: float = 0.0
     t_prepare: float = 0.0
-    t_kernel: float = 0.0
+    t_kernel: float = 0.0    # host-side kernel DISPATCH time only
+    t_sync: float = 0.0      # time the consumer waited on in-flight results
     t_integrate: float = 0.0
 
     def as_dict(self) -> Dict[str, float]:
@@ -69,7 +90,7 @@ class _SegmentCache:
     at most ``capacity`` segment-blocks per relation and evicts LRU."""
 
     def __init__(self, capacity: int):
-        self.capacity = capacity
+        self.capacity = max(1, capacity)
         self._store: "collections.OrderedDict[Tuple[str, int], tuple]" = (
             collections.OrderedDict())
         self.evictions = 0
@@ -95,6 +116,26 @@ class _SegmentCache:
         return len(self._store)
 
 
+class _Launch:
+    """One dispatched batched kernel whose results may not be ready yet."""
+
+    __slots__ = ("relation", "segments", "M", "L", "n_rows", "done")
+
+    def __init__(self, relation, segments, M, L, n_rows):
+        self.relation = relation
+        self.segments = segments      # real (unpadded) segment ids
+        self.M = M                    # (B_padded, R, deg) device array
+        self.L = L                    # (B_padded, R) device array
+        self.n_rows = n_rows          # per-segment internal row counts
+        self.done = False
+
+    def is_ready(self) -> bool:
+        try:
+            return self.M.is_ready() and self.L.is_ready()
+        except AttributeError:  # pragma: no cover - very old jax
+            return False
+
+
 class RelationEngine:
     """GALE: GPU(TPU)-Aided Localized data structurE."""
 
@@ -110,6 +151,7 @@ class RelationEngine:
         block_y: int = 256,
         deg: Optional[Dict[str, int]] = None,
         async_dispatch: bool = True,
+        inflight_max: int = 8,
     ):
         if pre.tables is None:
             raise ValueError("precondition(..., build_tables=True) required")
@@ -122,6 +164,7 @@ class RelationEngine:
         self.block_x = block_x
         self.block_y = block_y
         self.async_dispatch = async_dispatch
+        self.inflight_max = max(1, inflight_max)
         self.relations = tuple(r for r in relations if r in OFFLOADED_RELATIONS)
         self.deg = dict(ops.DEFAULT_DEG)
         if deg:
@@ -131,6 +174,11 @@ class RelationEngine:
         # (paper §4.5 'Justification of design choices').
         self.queues: Dict[str, List[int]] = {r: [] for r in self.relations}
         self.cache = _SegmentCache(cache_segments)
+        # In-flight futures: (relation, segment) -> _Launch whose device
+        # arrays may still be computing. Launches retire into the cache at
+        # the first read that needs them (or opportunistically when ready).
+        self._inflight: Dict[Tuple[str, int], _Launch] = {}
+        self._flights: "collections.deque[_Launch]" = collections.deque()
         self.stats = EngineStats()
 
         # Device-resident stacked tables (copied once, like the paper copying
@@ -153,9 +201,14 @@ class RelationEngine:
         """Non-blocking enqueue (consumer -> leader queue)."""
         t0 = time.perf_counter()
         q = self.queues[relation]
+        qs = set(q)
         for s in segments:
-            if (relation, int(s)) not in self.cache and int(s) not in q:
-                q.append(int(s))
+            s = int(s)
+            if ((relation, s) not in self.cache
+                    and (relation, s) not in self._inflight
+                    and s not in qs):
+                q.append(s)
+                qs.add(s)
         self.stats.t_enqueue += time.perf_counter() - t0
 
     def get(self, relation: str, segment: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -165,49 +218,142 @@ class RelationEngine:
         kind, in global-id order starting at ``interval[kind][segment]``."""
         segment = int(segment)
         self.stats.requests += 1
+        self._count(relation, segment)
+        return self._fetch(relation, segment)
+
+    def get_batch(self, relation: str, segments: Sequence[int]):
+        """Fetch several segments; produces misses in one batched launch."""
+        segments = [int(s) for s in segments]
+        self.stats.requests += len(segments)
+        for s in segments:
+            self._count(relation, s)
+        missing = [s for s in segments
+                   if (relation, s) not in self.cache
+                   and (relation, s) not in self._inflight]
+        if missing:
+            self.request(relation, missing)
+            self._drain([relation])
+        return [self._fetch(relation, s) for s in segments]
+
+    def prefetch(self, relation: str, segments: Sequence[int]) -> None:
+        """Traversal-order hint: enqueue + dispatch without blocking (the
+        consumer keeps running; the launch lands in the in-flight table)."""
+        self.request(relation, segments)
+        self._drain([relation])
+
+    def prefetch_many(self, requests: Dict[str, Sequence[int]]) -> None:
+        """Prefetch several relations at once; launches are dispatched
+        round-robin across relations so their kernels are all in flight
+        before the consumer resumes."""
+        for r, segs in requests.items():
+            if r in self.queues:
+                self.request(r, segs)
+        self._drain([r for r in requests if r in self.queues])
+
+    # -- leader-producer side -----------------------------------------------
+
+    def _count(self, relation: str, segment: int) -> None:
         key = (relation, segment)
-        hit = self.cache.get(key)
-        if hit is None:
-            self.stats.cache_misses += 1
-            t0 = time.perf_counter()
-            # a blocking miss jumps the queue (consumer is stalled on it)
-            q = self.queues[relation]
-            if segment in q:
-                q.remove(segment)
-            q.insert(0, segment)
-            self.stats.t_queue += time.perf_counter() - t0
-            self._produce(relation)
-            hit = self.cache.get(key)
-        else:
+        if key in self.cache:
             self.stats.cache_hits += 1
+        elif key in self._inflight:
+            self.stats.cache_hits += 1
+            self.stats.inflight_hits += 1
+        else:
+            self.stats.cache_misses += 1
+
+    def _fetch(self, relation: str, segment: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Stat-free read: serve from cache, else sync the in-flight launch,
+        else queue-jump + dispatch + sync. Used by get() and get_batch()."""
+        key = (relation, segment)
+        while True:
+            hit = self.cache.get(key)
+            if hit is not None:
+                break
+            launch = self._inflight.get(key)
+            if launch is None:
+                t0 = time.perf_counter()
+                # a blocking miss jumps the queue (consumer is stalled on
+                # it); at the queue front it integrates last (MRU), so its
+                # own launch can never evict it and the loop terminates
+                q = self.queues[relation]
+                if segment in q:
+                    q.remove(segment)
+                q.insert(0, segment)
+                self.stats.t_queue += time.perf_counter() - t0
+                launch = self._dispatch(relation)
+            if launch is not None:
+                self._sync(launch)
+            # loop: a prefetched launch's own integration may have
+            # LRU-evicted this segment (cache smaller than the launch), in
+            # which case it must be re-dispatched, now at the batch front
         M, L, n_rows = hit
         t0 = time.perf_counter()
         out = (np.asarray(M[:n_rows]), np.asarray(L[:n_rows]))
         self.stats.t_integrate += time.perf_counter() - t0
         return out
 
-    def get_batch(self, relation: str, segments: Sequence[int]):
-        """Fetch several segments; produces misses in one batched launch."""
-        missing = [int(s) for s in segments
-                   if (relation, int(s)) not in self.cache]
-        if missing:
-            self.stats.cache_misses += len(missing)
-            self.stats.cache_hits += len(segments) - len(missing)
-            self.request(relation, missing)
-            self._produce(relation)
-        else:
-            self.stats.cache_hits += len(segments)
-        self.stats.requests += len(segments)
-        return [self.get(relation, s) for s in segments]
+    def _drain(self, relations: Optional[Sequence[str]] = None) -> None:
+        """Round-robin one bounded pass over the pending queues, dispatching
+        up to ``batch_max`` segments per relation per turn so several
+        relation kernels can be in flight at once. The budget is fixed at
+        entry: lookahead overflow requeued by a dispatch does not extend
+        this pass (production rolls forward on later calls instead)."""
+        rels = [r for r in (relations or self.relations) if self.queues[r]]
+        budgets = {r: len(self.queues[r]) for r in rels}
+        progress = True
+        while progress:
+            progress = False
+            for r in rels:
+                if budgets[r] <= 0 or not self.queues[r]:
+                    continue
+                before = len(self.queues[r])
+                self._dispatch(r)
+                budgets[r] -= max(1, before - len(self.queues[r]))
+                progress = True
+        self._harvest()
 
-    def prefetch(self, relation: str, segments: Sequence[int]) -> None:
-        """Traversal-order hint: enqueue + produce without blocking (the
-        consumer keeps running; JAX async dispatch overlaps the kernel)."""
-        self.request(relation, segments)
-        if self.queues[relation]:
-            self._produce(relation, blocking=False)
+    def _harvest(self) -> None:
+        """Retire completed in-flight launches into the cache without
+        blocking (zero-wait integration of finished futures)."""
+        for launch in self._flights:
+            if not launch.done and launch.is_ready():
+                self._integrate(launch)
+        if any(l.done for l in self._flights):
+            self._flights = collections.deque(
+                l for l in self._flights if not l.done)
 
-    # -- leader-producer side -------------------------------------------------
+    def _sync(self, launch: _Launch) -> None:
+        """Block until a dispatched launch is ready (consumer wait — the
+        paper's Fig. 10 'waiting' metric) and integrate it."""
+        if launch.done:
+            return
+        t0 = time.perf_counter()
+        jax.block_until_ready((launch.M, launch.L))
+        self.stats.t_sync += time.perf_counter() - t0
+        self._integrate(launch)
+
+    def _integrate(self, launch: _Launch) -> None:
+        if launch.done:
+            return
+        t0 = time.perf_counter()
+        # One host copy per launch while the results are known-ready. Cached
+        # blocks must be host arrays, not device views: a lazy device slice
+        # would queue behind later in-flight kernels on the single device
+        # stream, so reads of batch k would stall on batch k+1's launch.
+        Mh = np.asarray(launch.M)
+        Lh = np.asarray(launch.L)
+        # Reverse order so the explicitly requested segments (batch front)
+        # are most-recently-used and cannot be LRU-evicted by their own
+        # lookahead when the cache is small.
+        for i, s in reversed(list(enumerate(launch.segments))):
+            self._inflight.pop((launch.relation, s), None)
+            self.cache.put((launch.relation, s),
+                           (Mh[i], Lh[i], launch.n_rows[i]))
+        launch.done = True
+        self.stats.evictions = self.cache.evictions
+        self.stats.t_integrate += time.perf_counter() - t0
 
     def _lookahead_segments(self, relation: str, batch: List[int]) -> List[int]:
         """Extend a drained batch with subsequent segments (paper §4.5:
@@ -219,23 +365,45 @@ class RelationEngine:
         for s in batch:
             for d in range(1, self.lookahead + 1):
                 n = s + d
-                if n < ns and n not in seen and (relation, n) not in self.cache:
+                if (n < ns and n not in seen
+                        and (relation, n) not in self.cache
+                        and (relation, n) not in self._inflight):
                     seen.add(n)
                     out.append(n)
         return out
 
-    def _produce(self, relation: str, blocking: bool = True) -> None:
-        """Drain the queue for `relation` (no fixed batch size — paper §4.5),
-        add lookahead, and launch one batched kernel."""
+    def _dispatch(self, relation: str) -> Optional[_Launch]:
+        """Drain the queue for ``relation`` (up to ``batch_max``), add
+        lookahead, and dispatch one batched kernel. Never blocks when
+        ``async_dispatch`` is on: the returned launch holds device-array
+        futures registered in the in-flight table."""
         t0 = time.perf_counter()
         q = self.queues[relation]
-        batch = q[: self.batch_max]
-        del q[: len(batch)]
+        batch: List[int] = []
+        while q and len(batch) < self.batch_max:
+            s = q.pop(0)
+            # stale entry: produced since it was queued
+            if (relation, s) in self.cache or (relation, s) in self._inflight:
+                continue
+            batch.append(s)
         if not batch:
-            return
-        batch = batch + self._lookahead_segments(relation, batch)
-        batch = batch[: max(self.batch_max, len(batch))]
-        segs = jnp.asarray(np.asarray(batch, dtype=np.int32))
+            self.stats.t_prepare += time.perf_counter() - t0
+            return None
+        look = self._lookahead_segments(relation, batch)
+        room = self.batch_max - len(batch)
+        batch = batch + look[:room]
+        if look[room:]:
+            # the launch is capped at batch_max; overflow lookahead is
+            # requeued so proactive production continues in later launches
+            qs = set(q)
+            q.extend(s for s in look[room:] if s not in qs)
+        # pad the launch to a power-of-two bucket (duplicating the last
+        # segment) so jit sees O(log batch_max) shapes, not one per drain
+        b_pad = 1
+        while b_pad < len(batch):
+            b_pad *= 2
+        padded = batch + [batch[-1]] * (b_pad - len(batch))
+        segs = jnp.asarray(np.asarray(padded, dtype=np.int32))
 
         kx, ky = RELATION_TABLES[relation]
         deg = self.deg[relation]
@@ -254,22 +422,27 @@ class RelationEngine:
         M, L = ops.relation_block(
             relation, tabX, tabY, colg, nvl, deg=deg, backend=self.backend,
             block_x=self.block_x, block_y=self.block_y)
-        if blocking or not self.async_dispatch:
-            jax.block_until_ready((M, L))
         self.stats.t_kernel += time.perf_counter() - t1
         self.stats.kernel_launches += 1
         self.stats.segments_produced += len(batch)
 
-        # Integrate: store per-segment views (device arrays; conversion to
-        # host happens lazily at get()). Reverse order so the explicitly
-        # requested segments (batch front) are most-recently-used and cannot
-        # be LRU-evicted by their own lookahead when the cache is small.
-        t2 = time.perf_counter()
         n_int, _ = self.tables.counts(kx if relation != "VV" else "V")
-        for i, s in reversed(list(enumerate(batch))):
-            self.cache.put((relation, s), (M[i], L[i], int(n_int[s])))
-        self.stats.evictions = self.cache.evictions
-        self.stats.t_integrate += time.perf_counter() - t2
+        launch = _Launch(relation, batch, M, L,
+                         [int(n_int[s]) for s in batch])
+        for s in batch:
+            self._inflight[(relation, s)] = launch
+        self._flights.append(launch)
+        if not self.async_dispatch:
+            self._sync(launch)
+        else:
+            # backpressure on genuinely unfinished launches only (reads
+            # retire launches via _sync without removing them from here)
+            if any(l.done for l in self._flights):
+                self._flights = collections.deque(
+                    l for l in self._flights if not l.done)
+            if len(self._flights) > self.inflight_max:
+                self._sync(self._flights.popleft())
+        return launch
 
     def _table_dev(self, kind: str, segs: jnp.ndarray) -> jnp.ndarray:
         if kind == "V":

@@ -206,6 +206,9 @@ class TopoClusterDS:
     def prefetch(self, relation, segments):
         pass  # no proactive computation
 
+    def prefetch_many(self, requests):
+        pass
+
 
 class ActopoDS:
     """ACTOPO-style baseline [29]: CPU task-parallel — producers precompute
@@ -229,3 +232,6 @@ class ActopoDS:
 
     def prefetch(self, relation, segments):
         self.engine.prefetch(relation, segments)
+
+    def prefetch_many(self, requests):
+        self.engine.prefetch_many(requests)

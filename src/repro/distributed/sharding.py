@@ -26,10 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:  # jax >= 0.6 exposes shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+from ..launch.mesh import shard_map_compat
 
 
 @dataclasses.dataclass
@@ -160,13 +157,12 @@ class Runtime:
                 jnp.swapaxes(den, 1, 2)[..., None], 1e-30).astype(q_.dtype)
             return out.astype(q_.dtype)
 
-        return shard_map(
+        return shard_map_compat(
             body, mesh=self.mesh,
             in_specs=(P(bspec, None, None, None),
                       P(bspec, s_ax, None, None),
                       P(bspec, s_ax, None, None), P(bspec)),
             out_specs=P(bspec, None, None, None),
-            check_vma=False,
         )(q, K, V, pos)
 
     # -- MoE dispatch ----------------------------------------------------------
@@ -191,23 +187,21 @@ class Runtime:
             # tokens are TP-replicated between blocks; each model row picks
             # the pairs routed to ITS experts locally (no a2a) and the
             # outputs combine with a single psum.
-            fn = shard_map(
+            fn = shard_map_compat(
                 lambda pp, xx: moe_ffn_ep_replicated(
                     pp, xx, cfg, dtype, ep_axis=self.tp_axis),
                 mesh=self.mesh,
                 in_specs=(self.moe_param_specs(), tok_spec),
                 out_specs=tok_spec,
-                check_vma=False,
             )
             return fn(p, x_flat)
-        fn = shard_map(
+        fn = shard_map_compat(
             lambda pp, xx: moe_ffn(pp, xx, cfg, dtype,
                                    ep_axis=self.fsdp_axis,
                                    tp_axis=self.tp_axis),
             mesh=self.mesh,
             in_specs=(self.moe_param_specs(), tok_spec),
             out_specs=tok_spec,
-            check_vma=False,
         )
         return fn(p, x_flat)
 

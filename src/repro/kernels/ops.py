@@ -84,11 +84,33 @@ def compact(mask: jnp.ndarray, col_global: jnp.ndarray, deg: int
     col_global: (B, N) int32   — local -> global id map (-1 for padding)
     returns M (B, R, deg) int32 global ids (-1 padded, ascending local order)
             L (B, R) int32 counts (saturating at deg is the caller's check)
+
+    Nonzero columns get descending scores in ascending column order, so
+    top_k yields "all set columns, ascending" — the paper's M array order.
     """
+    return _compact_impl(mask, col_global, deg)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "exact", "exclude_diag"))
+def predicate(C: jnp.ndarray, k: int, exact: bool,
+              exclude_diag: bool) -> jnp.ndarray:
+    """Counts -> boolean relation block."""
+    return _predicate_impl(C, k, exact, exclude_diag)
+
+
+def _predicate_impl(C, k, exact, exclude_diag):
+    m = (C == k) if exact else (C >= k)
+    if exclude_diag:
+        n = min(C.shape[1], C.shape[2])
+        eye = jnp.eye(n, dtype=bool)
+        pad = jnp.zeros((C.shape[1], C.shape[2]), dtype=bool).at[:n, :n].set(eye)
+        m = jnp.logical_and(m, ~pad[None])
+    return m
+
+
+def _compact_impl(mask, col_global, deg):
     B, R, N = mask.shape
     iota = jnp.arange(N, dtype=jnp.int32)
-    # nonzero columns get descending scores in ascending column order, so
-    # top_k yields "all set columns, ascending" — the paper's M array order.
     scores = jnp.where(mask, N - iota, 0).astype(jnp.int32)
     vals, idx = jax.lax.top_k(scores, deg)            # (B, R, deg)
     valid = vals > 0
@@ -99,17 +121,19 @@ def compact(mask: jnp.ndarray, col_global: jnp.ndarray, deg: int
     return M, L
 
 
-@functools.partial(jax.jit, static_argnames=("k", "exact", "exclude_diag"))
-def predicate(C: jnp.ndarray, k: int, exact: bool,
-              exclude_diag: bool) -> jnp.ndarray:
-    """Counts -> boolean relation block."""
-    m = (C == k) if exact else (C >= k)
-    if exclude_diag:
-        n = min(C.shape[1], C.shape[2])
-        eye = jnp.eye(n, dtype=bool)
-        pad = jnp.zeros((C.shape[1], C.shape[2]), dtype=bool).at[:n, :n].set(eye)
-        m = jnp.logical_and(m, ~pad[None])
-    return m
+@functools.partial(jax.jit, static_argnames=("relation", "nvl", "deg"))
+def _relation_block_fused(relation, tabX, tabY, col_global, nvl, deg):
+    """counts -> predicate -> compaction fused into ONE jitted computation,
+    so the engine pays a single dispatch per launch and the whole epilogue
+    is one in-flight future (async producer contract, see core/engine.py)."""
+    k, exact = PREDICATE[relation]
+    if relation == "VV":
+        C = ref.relation_counts_vv(tabX, nvl)
+        mask = _predicate_impl(C, k, exact, exclude_diag=True)
+    else:
+        C = ref.relation_counts_meet(tabX, tabY, nvl)
+        mask = _predicate_impl(C, k, exact, exclude_diag=False)
+    return _compact_impl(mask, col_global.astype(jnp.int32), deg)
 
 
 def relation_block(
@@ -126,9 +150,14 @@ def relation_block(
     """Full pipeline: counts -> predicate -> compaction.
 
     For VV, pass ``tabX = tabY = T_local`` and ``col_global = LV_global``;
-    rows/cols are local vertices. Returns (M, L) with global ids."""
+    rows/cols are local vertices. Returns (M, L) with global ids. The xla
+    backend runs the whole pipeline as one fused jit dispatch; the pallas
+    backends keep the counts kernel separate from the jitted epilogue."""
     k, exact = PREDICATE[relation]
     deg = DEFAULT_DEG[relation] if deg is None else deg
+    if backend == "xla":
+        return _relation_block_fused(relation, tabX, tabY, col_global,
+                                     nvl, deg)
     if relation == "VV":
         C = counts_vv(tabX, nvl, backend=backend, block=block_x)
         mask = predicate(C, k, exact, exclude_diag=True)

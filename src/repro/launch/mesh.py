@@ -1,17 +1,68 @@
-"""Production mesh construction.
+"""Production mesh construction + JAX version compatibility shims.
 
 Import of this module never touches jax device state; meshes are built by
 functions only (the dry-run sets XLA_FLAGS before any jax import).
+
+The repo is pinned to the container's JAX (0.4.x), where several mesh APIs
+that newer code uses do not exist yet. Everything that builds or installs
+a mesh must go through the shims here instead of calling jax directly:
+
+  - :func:`make_mesh` — ``jax.make_mesh`` with ``axis_types=Auto`` where
+    ``jax.sharding.AxisType`` exists (jax >= 0.5), plain ``jax.make_mesh``
+    otherwise (0.4.x has no axis_types kwarg; Auto is the 0.4.x behaviour).
+  - :func:`use_mesh` — context manager equivalent of ``jax.set_mesh``:
+    prefers ``jax.set_mesh``, then ``jax.sharding.use_mesh``, then the
+    legacy ``with mesh:`` thread-resources context on 0.4.x.
+  - :func:`shard_map_compat` — ``jax.shard_map`` / experimental shard_map
+    with the ``check_vma``/``check_rep`` kwarg rename papered over.
 """
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
 
 
+def make_mesh(shape, axes):
+    """Version-portable ``jax.make_mesh`` (explicitly Auto axis types on
+    jax versions that distinguish them)."""
+    if hasattr(jax.sharding, "AxisType"):
+        auto = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=auto)
+    return jax.make_mesh(shape, axes)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Install ``mesh`` as the ambient mesh, whatever this jax calls that."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield
+    elif hasattr(jax.sharding, "use_mesh"):
+        with jax.sharding.use_mesh(mesh):
+            yield
+    else:  # 0.4.x: the legacy thread-resources mesh context
+        with mesh:
+            yield
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check=False):
+    """shard_map across the check_vma (>= 0.6) / check_rep (< 0.6) rename."""
+    try:
+        sm = jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as sm  # type: ignore
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)
+
+
 def _mk(shape, axes):
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -35,6 +35,7 @@ def test_moe_shard_map_matches_local():
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs import get_smoke_config
     from repro.distributed.sharding import Runtime
+    from repro.launch.mesh import make_mesh, use_mesh
     from repro.models import moe
     from jax.sharding import PartitionSpec as P
 
@@ -42,8 +43,7 @@ def test_moe_shard_map_matches_local():
     # high capacity factor -> no token drops -> paths must match exactly
     cfg = dataclasses.replace(get_smoke_config("granite-moe-3b-a800m"),
                               moe_capacity_factor=8.0)
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     rng = np.random.default_rng(0)
     T, d = 16, cfg.d_model
     x = jnp.asarray(rng.normal(0, 1, (T, d)).astype(np.float32))
@@ -53,7 +53,7 @@ def test_moe_shard_map_matches_local():
         p = moe.moe_init(jax.random.PRNGKey(0), cfg, ep=rt.ep_size)
         # local reference with the same padded weights (fp32 for tight tol)
         ref = moe.moe_ffn(p, x, cfg, jnp.float32)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             got = rt.moe_apply(p, x, cfg, jnp.float32)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=2e-4, atol=2e-4)
@@ -65,10 +65,10 @@ def test_flash_decode_matches_plain_attention():
     _run_py("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.distributed.sharding import Runtime
+    from repro.launch.mesh import make_mesh, use_mesh
     from repro.models.layers import _sdpa, repeat_kv
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     rt = Runtime(mesh=mesh, batch_axes=("data",))
     rng = np.random.default_rng(1)
     B, T, H, kv, hd = 4, 64, 8, 2, 16
@@ -79,7 +79,7 @@ def test_flash_decode_matches_plain_attention():
 
     mask = (jnp.arange(T)[None, :] <= pos[:, None])[:, None, None, :]
     want = _sdpa(q, repeat_kv(K, H), repeat_kv(V, H), mask, jnp.float32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         got = rt.flash_decode(q, K, V, pos)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
@@ -129,15 +129,15 @@ def test_elastic_reshard_restore():
     import jax, jax.numpy as jnp, numpy as np, tempfile
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.checkpoint import ckpt
+    from repro.launch.mesh import make_mesh
 
     d = tempfile.mkdtemp()
-    auto = (jax.sharding.AxisType.Auto,) * 2
-    mesh1 = jax.make_mesh((4, 2), ("data", "model"), axis_types=auto)
+    mesh1 = make_mesh((4, 2), ("data", "model"))
     x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
     xs = jax.device_put(x, NamedSharding(mesh1, P("data", "model")))
     ckpt.save(d, {"w": xs}, step=1)
 
-    mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=auto)
+    mesh2 = make_mesh((2, 4), ("data", "model"))
     sh2 = {"w": NamedSharding(mesh2, P("model", "data"))}
     restored, step = ckpt.restore(d, {"w": x}, shardings=sh2)
     np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(x))

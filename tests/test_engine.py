@@ -113,6 +113,124 @@ def test_no_relation_overflow(setup):
             assert L.max(initial=0) <= M.shape[1], (R, k)
 
 
+def test_async_bit_identical_to_blocking_and_explicit(setup):
+    """Regression: async get() (in-flight futures, prefetch-driven) returns
+    bit-identical (M, L) blocks to the blocking path and to the explicit
+    oracle — scheduling must never change answers."""
+    sm, pre = setup
+    rels = ["VV", "VT", "EF"]
+    a = RelationEngine(pre, rels, lookahead=3, batch_max=4,
+                       async_dispatch=True)
+    b = RelationEngine(pre, rels, lookahead=3, batch_max=4,
+                       async_dispatch=False)
+    ex = ExplicitTriangulation(pre, rels)
+    # drive the async engine the way the algorithms do: prefetch ahead,
+    # then read — most reads land on in-flight futures
+    for R in rels:
+        a.prefetch(R, range(min(4, sm.n_segments)))
+    for R in rels:
+        for s in range(sm.n_segments):
+            a.prefetch(R, [min(s + 1, sm.n_segments - 1)])
+            Ma, La = a.get(R, s)
+            Mb, Lb = b.get(R, s)
+            Me, Le = ex.get(R, s)
+            np.testing.assert_array_equal(Ma, Mb)
+            np.testing.assert_array_equal(La, Lb)
+            np.testing.assert_array_equal(La, Le)
+            for r in range(len(La)):
+                assert set(Ma[r][: La[r]]) == set(Me[r][: Le[r]]), (R, s, r)
+    # prefetching actually produced ahead (hits from cache or in-flight)
+    assert a.stats.cache_hits > 0
+
+
+def test_inflight_futures_table(setup):
+    """White-box: a dispatched launch registers (relation, segment) futures
+    in the in-flight table; a consumer read syncs exactly that launch,
+    retires it into the cache, and counts as an in-flight hit."""
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV"], lookahead=0, batch_max=4,
+                         async_dispatch=True)
+    eng.request("VV", [0, 1, 2])
+    launch = eng._dispatch("VV")
+    assert launch is not None and not launch.done
+    for s in (0, 1, 2):
+        assert ("VV", s) in eng._inflight
+    eng.get("VV", 0)                       # blocks only on this read
+    assert eng.stats.inflight_hits == 1
+    assert launch.done
+    for s in (0, 1, 2):                    # whole launch retired at once
+        assert ("VV", s) not in eng._inflight
+        assert ("VV", s) in eng.cache
+    # a segment is never produced twice: re-requesting is a no-op
+    eng.request("VV", [1])
+    assert eng.queues["VV"] == []
+    assert eng.stats.kernel_launches == 1
+
+
+def test_get_batch_counts_each_segment_once(setup):
+    """Regression: get_batch must not double-count requests/hits/misses
+    (it used to bump them once itself and once more per get())."""
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV"], lookahead=0, batch_max=64)
+    segs = list(range(6))
+    eng.get_batch("VV", segs)
+    assert eng.stats.requests == 6
+    assert eng.stats.cache_misses == 6
+    assert eng.stats.cache_hits == 0
+    eng.get_batch("VV", segs)
+    assert eng.stats.requests == 12
+    assert eng.stats.cache_misses == 6
+    assert eng.stats.cache_hits == 6
+    assert (eng.stats.cache_hits + eng.stats.cache_misses
+            == eng.stats.requests)
+
+
+def test_lookahead_capped_at_batch_max(setup):
+    """Regression: lookahead must not grow a launch past batch_max (the cap
+    used to be a no-op); overflow rolls into later launches instead."""
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV"], lookahead=8, batch_max=4)
+    eng.get("VV", 0)
+    assert eng.stats.kernel_launches == 1
+    assert eng.stats.segments_produced <= 4
+    # overflow lookahead segments were requeued, not dropped
+    assert eng.queues["VV"], "lookahead overflow should be requeued"
+    assert all(s <= 8 for s in eng.queues["VV"])
+
+
+def test_sync_wait_and_dispatch_accounted_separately(setup):
+    """t_kernel is host-side dispatch only; t_sync is the consumer wait
+    (Fig. 10 'waiting'). Both must be populated on the async path."""
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV"], lookahead=2, async_dispatch=True)
+    eng.prefetch("VV", range(min(8, sm.n_segments)))
+    for s in range(min(8, sm.n_segments)):
+        eng.get("VV", s)
+    assert eng.stats.t_kernel > 0
+    assert eng.stats.kernel_launches >= 1
+    # the blocking arm waits on every launch and must record it as t_sync
+    blk = RelationEngine(pre, ["VV"], lookahead=2, async_dispatch=False)
+    for s in range(min(8, sm.n_segments)):
+        blk.get("VV", s)
+    assert blk.stats.t_sync > 0
+
+
+def test_read_survives_eviction_by_own_launch(setup):
+    """Regression: a segment deep in a prefetched launch can be LRU-evicted
+    by that launch's own integration when the cache is smaller than the
+    launch; reading it must re-dispatch, not crash."""
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV"], lookahead=0, batch_max=16,
+                         cache_segments=4, async_dispatch=True)
+    n = min(16, sm.n_segments)
+    eng.prefetch("VV", range(n))
+    s = n - 2
+    M, L = eng.get("VV", s)
+    ex = ExplicitTriangulation(pre, ["VV"])
+    Me, Le = ex.get("VV", s)
+    assert (L == Le).all()
+
+
 def test_toy_matches_paper_figure(setup):
     """Fig. 1: VV(v0) on the toy mesh (labels modulo canonicalization)."""
     mesh = two_tets()

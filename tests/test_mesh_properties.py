@@ -3,7 +3,12 @@ canonicalization, relation symmetry/duality, Euler characteristic of the
 discrete gradient, and engine-vs-explicit agreement on random meshes."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.algorithms.critical_points import total_order
 from repro.algorithms.discrete_gradient import discrete_gradient
