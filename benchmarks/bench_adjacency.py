@@ -1,0 +1,84 @@
+"""Batched vs scalar cross-segment adjacency completion (core/adjacency.py).
+
+For each adjacency relation (EE/FF/TT) the same query set is completed twice
+on fresh engines:
+
+  - ``scalar``  : :func:`complete_adjacency_scalar` — per-simplex Python
+    union, one blocking block read per (query, segment) pair (the shape of
+    the pre-batched code path);
+  - ``batched`` : :func:`complete_adjacency` — vectorized fan-out, one
+    ``prefetch_many`` per chunk, vectorized union/dedup/compaction.
+
+Both arms get an untimed warmup over the full query set so neither pays jit
+compilation or first-touch block production — the timed section compares the
+completion machinery itself (fan-out planning, row gather, union/dedup/
+compaction) on hot blocks, which is what differs between the two paths. Each
+pair emits a ``speedup`` row plus a verification row asserting the two
+paths' (M, L) arrays are bit-identical. Completion counters (fan-out blocks,
+dedup ratio) come from the engine stats of the batched arm.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.adjacency import (
+    ADJ_COMPLETION_RELATIONS,
+    complete_adjacency,
+    complete_adjacency_scalar,
+)
+
+from . import common
+
+# EF is included so preconditioning builds the E interval/lookup tables the
+# FF fan-out needs; FT likewise for TT (boundary_TF owner resolution).
+BENCH_RELS = ("EE", "FF", "TT", "EF", "FT")
+
+
+def _query_ids(pre, relation: str, n: int) -> np.ndarray:
+    total = {"E": pre.n_edges, "F": pre.n_faces,
+             "T": pre.smesh.n_tets}[relation[0]]
+    return np.unique(np.linspace(0, total - 1, min(n, total), dtype=np.int64))
+
+
+def run(quick: bool = True) -> List[str]:
+    dataset = "fish" if quick else "stent"
+    n_ids = 384 if quick else 2048
+    rows: List[str] = []
+    _, pre, _, _ = common.prepare(dataset, BENCH_RELS)
+
+    for relation in ADJ_COMPLETION_RELATIONS:
+        ids = _query_ids(pre, relation, n_ids)
+
+        eng_s = common.make_ds("gale", pre, BENCH_RELS)
+        complete_adjacency_scalar(eng_s, relation, ids)    # untimed warmup
+        t_scalar, (Ms, Ls) = common.timed(
+            complete_adjacency_scalar, eng_s, relation, ids)
+
+        eng_b = common.make_ds("gale", pre, BENCH_RELS)
+        complete_adjacency(eng_b, relation, ids)           # untimed warmup
+        eng_b.stats = type(eng_b.stats)()                  # count timed run
+        t_batch, (Mb, Lb) = common.timed(
+            complete_adjacency, eng_b, relation, ids, 128)
+
+        identical = (np.array_equal(Ms, Mb) and np.array_equal(Ls, Lb))
+        st = eng_b.stats
+        rows.append(common.row(
+            f"adjacency/{relation}/{dataset}/scalar", t_scalar,
+            f"queries={len(ids)}"))
+        rows.append(common.row(
+            f"adjacency/{relation}/{dataset}/batched", t_batch,
+            f"queries={len(ids)};"
+            f"fanout_blocks={st.completion_fanout_blocks};"
+            f"dedup_ratio={st.completion_dedup_ratio:.3f}"))
+        rows.append(common.row(
+            f"adjacency/{relation}/{dataset}/speedup",
+            t_scalar / max(t_batch, 1e-9),
+            f"scalar_s={t_scalar:.4f};batched_s={t_batch:.4f};"
+            f"speedup={t_scalar / max(t_batch, 1e-9):.2f}x"))
+        rows.append(common.row(
+            f"adjacency/{relation}/{dataset}/bit_identical", 0.0,
+            f"identical={identical}"))
+    return rows

@@ -14,7 +14,9 @@ from . import common
 
 CP_RELS = ("VV", "VT")                       # paper: 2 queues
 DG_RELS = ("VE", "VF", "VT")                 # paper: 3 queues
-MS_RELS = ("VE", "VF", "VT", "FT")           # + FT for separatrices
+MS_RELS = ("VE", "VF", "VT", "FT", "TT")     # + FT/TT for separatrices
+# (engine-backed morse_smale assembles ascending successors from completed
+# TT adjacency; the other structures take the FT-gather path — bit-identical)
 
 STRUCTURES = ("gale", "actopo", "topocluster", "explicit")
 

@@ -22,14 +22,14 @@ def main() -> None:
                     help="full dataset pool (slower)")
     ap.add_argument("--only", default="",
                     help="comma list: algorithms,scalability,waiting,"
-                         "kernel_params")
+                         "kernel_params,memory_scaling,adjacency")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (bench_algorithms, bench_kernel_params,
-                            bench_memory_scaling, bench_scalability,
-                            bench_waiting)
+    from benchmarks import (bench_adjacency, bench_algorithms,
+                            bench_kernel_params, bench_memory_scaling,
+                            bench_scalability, bench_waiting)
 
     suites = {
         "algorithms": bench_algorithms,     # paper Figs. 7/8/9
@@ -37,6 +37,7 @@ def main() -> None:
         "waiting": bench_waiting,           # paper Tables 5/6/7
         "kernel_params": bench_kernel_params,  # paper Appendix A
         "memory_scaling": bench_memory_scaling,  # Figs. 7-9 memory bars
+        "adjacency": bench_adjacency,       # batched vs scalar completion
     }
     print("name,us_per_call,derived")
     for name, mod in suites.items():

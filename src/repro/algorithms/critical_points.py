@@ -24,8 +24,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.adjacency import complete_adjacency
+
 # type codes
 REGULAR, MINIMUM, SADDLE1, SADDLE2, MAXIMUM, DEGENERATE = -1, 0, 1, 2, 3, 4
+
+
+def boundary_vertices(ds, pre, batch: int = 4096) -> np.ndarray:
+    """Boolean mask of mesh-boundary vertices, via completed TT.
+
+    A tet has one completed-TT neighbour per *interior* face, so a tet with
+    fewer than 4 neighbours carries at least one boundary face; a face of
+    such a tet is boundary iff no TT neighbour also contains it. Banchoff
+    link classification is only exact for interior vertices, so callers use
+    this mask to qualify critical points on the domain boundary.
+
+    Requires a data structure with engine-native completion (a
+    ``RelationEngine`` whose relation set includes TT); TT rows are requested
+    in pipelined batches like every other relation."""
+    sm = pre.smesh
+    mask = np.zeros(sm.n_vertices, dtype=bool)
+    M, L = complete_adjacency(ds, "TT", np.arange(sm.n_tets), batch=batch)
+    cand = np.nonzero(L < 4)[0]            # tets with >= 1 boundary face
+    if len(cand) == 0:
+        return mask
+    Mc = M[cand]
+    deg = Mc.shape[1]
+    tf_t = ds.boundary_TF(cand)            # (c, 4) the candidates' faces
+    tf_nb = ds.boundary_TF(np.maximum(Mc, 0).reshape(-1)) \
+        .reshape(len(cand), deg, 4)        # (c, deg, 4) neighbours' faces
+    shared = (tf_t[:, :, None, None] == tf_nb[:, None, :, :]).any(-1)
+    interior = (shared & (Mc >= 0)[:, None, :]).any(-1)   # (c, 4)
+    bf = tf_t[~interior]                   # boundary face ids
+    mask[pre.F[bf].reshape(-1)] = True
+    return mask
 
 
 def total_order(scalars: np.ndarray) -> np.ndarray:
@@ -111,13 +143,19 @@ def critical_points(
     rank: np.ndarray,
     batch_segments: int = 8,
     lookahead_hint: bool = True,
+    flag_boundary: bool = False,
 ) -> Tuple[np.ndarray, Dict[str, int]]:
     """Run the algorithm over all segments through data structure ``ds``.
 
     The traversal is the paper's embarrassingly-parallel vertex sweep: for
     each batch of segments the consumer requests VV and VT blocks (the
     producer precomputes ahead via the engine's lookahead) and classifies the
-    batch on-device."""
+    batch on-device.
+
+    With ``flag_boundary=True`` (requires a data structure with TT
+    completion, see :func:`boundary_vertices`) the counts gain a
+    ``boundary_critical`` entry: non-regular vertices lying on the domain
+    boundary, where the interior link classification is only approximate."""
     sm = pre.smesh
     ns = sm.n_segments
     tets_dev = jnp.asarray(sm.tets.astype(np.int32))
@@ -175,4 +213,7 @@ def critical_points(
         "degenerate": int((types == DEGENERATE).sum()),
         "regular": int((types == REGULAR).sum()),
     }
+    if flag_boundary:
+        on_bd = boundary_vertices(ds, pre)
+        counts["boundary_critical"] = int((on_bd & (types != REGULAR)).sum())
     return types, counts

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.adjacency import complete_adjacency
+
 _BIG = np.iinfo(np.int32).max
 
 
@@ -200,11 +202,68 @@ def _lower_star_batch(
     return crit_vertex, min_e, has_edge, pair, crit, exists
 
 
+def audit_gradient(ds, pre, grad: GradientField,
+                   batch: int = 4096) -> Dict[str, int]:
+    """Cross-segment audit of the discrete vector field's matching property.
+
+    Lower stars partition the simplices, so pairing decisions made in
+    different segments can never claim the same cell — this audit verifies
+    that global invariant across segment boundaries using completed
+    adjacency (``core/adjacency.py``), requested in pipelined batches:
+
+    - ``tt_conflicts``: for every face->tet pair ``f -> t``, the *other*
+      cofacet of ``f`` (t's completed-TT neighbour across ``f``) must not
+      also be paired to ``f``.
+    - ``ff_conflicts``: for every edge->face pair ``e -> f``, no other face
+      containing ``e`` (an FF neighbour of ``f`` through ``e``) may claim
+      ``e`` as its paired edge.
+    - ``reverse_mismatch``: forward/reverse pair arrays must agree.
+
+    Requires a data structure with engine-native completion for TT and FF.
+    All counts are zero for a valid field."""
+    out = {"tt_conflicts": 0, "ff_conflicts": 0, "reverse_mismatch": 0}
+    f_paired = np.nonzero(grad.pair_f2t >= 0)[0]
+    out["reverse_mismatch"] += int(
+        (grad.pair_t2f[grad.pair_f2t[f_paired]] != f_paired).sum())
+    e_paired = np.nonzero(grad.pair_e2f >= 0)[0]
+    out["reverse_mismatch"] += int(
+        (grad.pair_f2e[grad.pair_e2f[e_paired]] != e_paired).sum())
+
+    if len(f_paired):
+        t = grad.pair_f2t[f_paired]
+        M, _ = complete_adjacency(ds, "TT", t, batch=batch)
+        deg = M.shape[1]
+        tf_nb = ds.boundary_TF(np.maximum(M, 0).reshape(-1)) \
+            .reshape(len(t), deg, 4)
+        across = (tf_nb == f_paired[:, None, None]).any(-1) & (M >= 0)
+        nb = np.where(across, M, -1)
+        claimed = (nb >= 0) & (grad.pair_t2f[np.maximum(nb, 0)]
+                               == f_paired[:, None])
+        out["tt_conflicts"] = int(claimed.any(-1).sum())
+    if len(e_paired):
+        fh = grad.pair_e2f[e_paired]
+        M, _ = complete_adjacency(ds, "FF", fh, batch=batch)
+        deg = M.shape[1]
+        fe_nb = ds.boundary_FE(np.maximum(M, 0).reshape(-1)) \
+            .reshape(len(fh), deg, 3)
+        through_e = (fe_nb == e_paired[:, None, None]).any(-1) & (M >= 0)
+        nb = np.where(through_e, M, -1)
+        claimed = (nb >= 0) & (grad.pair_f2e[np.maximum(nb, 0)]
+                               == e_paired[:, None])
+        out["ff_conflicts"] = int(claimed.any(-1).sum())
+    return out
+
+
 def discrete_gradient(
     ds, pre, rank: np.ndarray, batch_segments: int = 8,
+    audit: bool = False,
 ) -> GradientField:
     """Drive the lower-star batches through the data structure (GALE queues
-    VE/VF/VT — the paper's 3-queue configuration for this algorithm)."""
+    VE/VF/VT — the paper's 3-queue configuration for this algorithm).
+
+    With ``audit=True`` (requires engine-native TT/FF completion, see
+    :func:`audit_gradient`) the finished field is checked for cross-segment
+    matching conflicts and a failure raises ``ValueError``."""
     sm = pre.smesh
     nv, nt = sm.n_vertices, sm.n_tets
     ne, nf = pre.n_edges, pre.n_faces
@@ -301,4 +360,8 @@ def discrete_gradient(
             t_of = vtM[rowsT, colsT]
             g.pair_f2t[f_of] = t_of
             g.pair_t2f[t_of] = f_of
+    if audit:
+        report = audit_gradient(ds, pre, g)
+        if any(report.values()):
+            raise ValueError(f"gradient matching audit failed: {report}")
     return g

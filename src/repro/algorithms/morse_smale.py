@@ -15,9 +15,20 @@ segmentation:
 TPU adaptation: TTK traces separatrices sequentially (the paper's worst case
 for localized structures — segments get revisited unpredictably). We rewrite
 path-following as **pointer jumping** on global successor arrays: log₂(n)
-rounds of `succ = succ[succ]`, fully data-parallel. The successor arrays
-themselves are assembled segment-by-segment through the data structure, which
-preserves the paper's access pattern (every segment's FT block is requested).
+rounds of `succ = succ[succ]`, fully data-parallel.
+
+Two interchangeable (bit-identical) ways to assemble the ascending successor
+array:
+
+  - **FT gather** (baselines / non-engine data structures): every segment's
+    FT block is requested and the global face->cofacet table is materialized
+    (``_gather_ft``), as in earlier revisions.
+  - **Completed TT** (``adjacency="auto"`` on a `RelationEngine` whose
+    relation set covers TT+FT): the successor of a paired tet is its
+    cross-segment-completed TT neighbour across the paired face
+    (``core/adjacency.py``), requested in pipelined batches; the few FT rows
+    the 2-saddle separatrices still need are fetched only for the owner
+    segments of critical faces.
 """
 
 from __future__ import annotations
@@ -29,7 +40,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.adjacency import complete_adjacency
 from .discrete_gradient import GradientField
+
+
+def _supports_completion(ds, *relations) -> bool:
+    """Engine-native adjacency completion is available on data structures
+    exposing the inverse-map + full-block API with the needed relations."""
+    return (hasattr(ds, "local_rows") and hasattr(ds, "get_full")
+            and all(r in getattr(ds, "relations", ()) for r in relations))
 
 
 @dataclasses.dataclass
@@ -86,11 +105,61 @@ def _gather_ft(ds, pre, batch_segments: int = 16) -> np.ndarray:
     return ft
 
 
+def _cofacet_rows(ds, pre, face_ids, batch_segments: int = 16) -> np.ndarray:
+    """FT rows (m, 2) for specific faces only: one batched engine request per
+    set of owner segments instead of a whole-mesh gather."""
+    face_ids = np.asarray(face_ids, dtype=np.int64)
+    out = np.full((len(face_ids), 2), -1, dtype=np.int64)
+    if len(face_ids) == 0:
+        return out
+    segs = pre.owner_segment("F", face_ids)
+    uniq = [int(s) for s in np.unique(segs)]
+    if hasattr(ds, "prefetch"):
+        ds.prefetch("FT", uniq)
+    for s, (M, L) in zip(uniq, ds.get_batch("FT", uniq)):
+        sel = segs == s
+        rows = face_ids[sel] - int(pre.I_F[s])
+        w = min(2, M.shape[1])
+        out[sel, :w] = M[rows][:, :w]
+    return out
+
+
+def _ascending_successors_tt(ds, pre, grad: GradientField,
+                             batch: int) -> np.ndarray:
+    """Tet -> tet-across-its-paired-face successor via completed TT: the
+    unique cross-segment TT neighbour whose boundary contains the paired
+    face. Bit-identical to the FT-gather successor."""
+    nt = pre.smesh.n_tets
+    succ = np.arange(nt)
+    paired = np.nonzero(grad.pair_t2f >= 0)[0]
+    if len(paired) == 0:
+        return succ
+    f = grad.pair_t2f[paired]
+    M, _ = complete_adjacency(ds, "TT", paired, batch=batch)
+    p, deg = M.shape
+    tf_nb = ds.boundary_TF(np.maximum(M, 0).reshape(-1)).reshape(p, deg, 4)
+    across = (tf_nb == f[:, None, None]).any(-1) & (M >= 0)
+    has = across.any(-1)
+    nxt = M[np.arange(p), np.argmax(across, -1)]
+    # boundary faces have no second cofacet: the path stalls (succ = self)
+    succ[paired[has]] = nxt[has]
+    return succ
+
+
 def morse_smale(ds, pre, grad: GradientField,
-                batch_segments: int = 16) -> MSComplex:
+                batch_segments: int = 16,
+                adjacency: str = "auto") -> MSComplex:
+    """Extract the MS 1-skeleton + segmentation.
+
+    ``adjacency`` selects how ascending successors are assembled: ``"tt"``
+    forces the completed-TT path, ``"ft"`` the whole-mesh FT gather, and
+    ``"auto"`` (default) uses TT when ``ds`` supports engine-native
+    completion for TT and FT. Results are bit-identical either way."""
     sm = pre.smesh
     nv, nt = sm.n_vertices, sm.n_tets
     E = pre.E
+    use_tt = adjacency == "tt" or (
+        adjacency == "auto" and _supports_completion(ds, "TT", "FT"))
 
     # ---- descending: vertex successor through v->e pairs -------------------
     e = grad.pair_v2e                      # (nv,)
@@ -101,14 +170,23 @@ def morse_smale(ds, pre, grad: GradientField,
                      np.arange(nv))
     dest_min = np.asarray(_pointer_jump(jnp.asarray(other)))
 
-    # ---- ascending: tet successor through t->f pairs + FT ------------------
-    ft = _gather_ft(ds, pre, batch_segments)
-    f = grad.pair_t2f                      # (nt,) face this tet is paired to
-    cof0 = ft[np.maximum(f, 0), 0]
-    cof1 = ft[np.maximum(f, 0), 1]
-    me = np.arange(nt)
-    nxt = np.where(cof0 == me, cof1, cof0)  # the tet across the paired face
-    succ_t = np.where((f >= 0) & (nxt >= 0), nxt, me)
+    # ---- ascending: tet successor through t->f pairs -----------------------
+    s2 = np.nonzero(grad.crit_f)[0]
+    if use_tt:
+        # completed TT gives the tet across each paired face directly;
+        # only the critical faces' FT rows are fetched (targeted segments)
+        succ_t = _ascending_successors_tt(ds, pre, grad,
+                                          batch=64 * batch_segments)
+        cof_s2 = _cofacet_rows(ds, pre, s2, batch_segments)
+    else:
+        ft = _gather_ft(ds, pre, batch_segments)
+        f = grad.pair_t2f                  # (nt,) face this tet is paired to
+        cof0 = ft[np.maximum(f, 0), 0]
+        cof1 = ft[np.maximum(f, 0), 1]
+        me = np.arange(nt)
+        nxt = np.where(cof0 == me, cof1, cof0)   # tet across the paired face
+        succ_t = np.where((f >= 0) & (nxt >= 0), nxt, me)
+        cof_s2 = ft[s2]
     # paths that exit through a boundary face stall on a non-critical tet
     dest_t = np.asarray(_pointer_jump(jnp.asarray(succ_t)))
     reached_max = grad.crit_t[dest_t]
@@ -119,9 +197,8 @@ def morse_smale(ds, pre, grad: GradientField,
     ends1 = np.stack([s1, dest_min[E[s1, 0]], dest_min[E[s1, 1]]], axis=1) \
         if len(s1) else np.zeros((0, 3), np.int64)
 
-    s2 = np.nonzero(grad.crit_f)[0]
     if len(s2):
-        c0, c1 = ft[s2, 0], ft[s2, 1]
+        c0, c1 = cof_s2[:, 0], cof_s2[:, 1]
         m0 = np.where(c0 >= 0, dest_max[np.maximum(c0, 0)], -1)
         m1 = np.where(c1 >= 0, dest_max[np.maximum(c1, 0)], -1)
         ends2 = np.stack([s2, m0, m1], axis=1)

@@ -2,80 +2,246 @@
 
 A segment-local kernel sees only the segment's internal+external tets, so an
 adjacency row for simplex sigma can miss neighbours that share only the
-sub-simplex *not* containing the owner segment's vertex (DESIGN.md §5). The
-complete answer is the union of sigma's row over the owner segments of each
-of its boundary (k-1)-faces — every neighbour shares one of those faces, and
-both simplices contain that face's minimum vertex, hence appear in that
+sub-simplex *not* containing the owner segment's vertex (docs/DESIGN.md §5).
+The complete answer is the union of sigma's row over the owner segments of
+each of its boundary (k-1)-faces — every neighbour shares one of those faces,
+and both simplices contain that face's minimum vertex, hence appear in that
 owner's local tables.
 
-This module assembles that union through the engine (each query fans out to
-<= k+1 segment blocks, exercising the multi-queue batching path).
+This module assembles that union through the engine as a batched pipeline
+with a plan/execute split:
+
+  - :func:`plan_completion` vectorizes the boundary-face -> owner-segment
+    fan-out for the whole query batch, resolves every (segment, query) pair
+    to a local block row through the inverse maps built at table time
+    (``SegmentTables.inverse`` — no per-query table scans), and issues ONE
+    :meth:`RelationEngine.prefetch_many` for every block the batch needs, so
+    production overlaps with whatever the consumer does next.
+  - :func:`execute_completion` gathers the planned rows from the produced
+    blocks (one :meth:`RelationEngine.get_full` per distinct segment) and
+    performs the row union / self-removal / dedup / compaction as vectorized
+    numpy ops straight into the paper's padded ``(M, L)`` layout.
+
+:func:`complete_adjacency` drives both; with ``batch=`` it pipelines chunks
+(plan + prefetch chunk k+1 before executing chunk k), which is how the
+algorithm drivers request completed adjacency. Completion work is accounted
+in ``EngineStats`` (``completion_queries``, ``completion_fanout_blocks``,
+``completion_raw_neighbors`` / ``completion_neighbors`` and the derived
+``completion_dedup_ratio``).
+
+:func:`complete_adjacency_scalar` is the one-simplex-at-a-time reference kept
+for the A/B benchmark (``benchmarks/bench_adjacency.py``) and the
+bit-identical regression test.
 """
 
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+import dataclasses
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from .engine import RelationEngine
 
+ADJ_COMPLETION_RELATIONS = ("EE", "FF", "TT")
 
-def _local_row(eng: RelationEngine, relation: str, kind: str,
-               seg: int, gid: int) -> set:
-    """Relation row for simplex `gid` inside segment `seg`'s local block
-    (the simplex may be internal or external there)."""
-    t = eng.tables
+
+@dataclasses.dataclass
+class CompletionPlan:
+    """Resolved fan-out of one completion batch: which block rows to union.
+
+    ``pair_*`` arrays describe the deduplicated (query, segment) pairs, each
+    carrying the query simplex's local row inside that segment's full block.
+    """
+
+    relation: str
+    ids: np.ndarray         # (n,) i64 query global ids
+    pair_query: np.ndarray  # (P,) i64 index into ids
+    pair_seg: np.ndarray    # (P,) i64 segment whose block is consulted
+    pair_row: np.ndarray    # (P,) i32 row of the query in that full block
+    segments: np.ndarray    # distinct consulted segments, ascending
+
+
+def _boundary_owner_segments(eng: RelationEngine, relation: str,
+                             ids: np.ndarray) -> np.ndarray:
+    """Owner segments of each query's boundary (k-1)-faces: (n, k+1)."""
+    kind = relation[0]
+    pre = eng.pre
     if kind == "E":
-        table = t.LE_global
-    elif kind == "F":
-        table = t.LF_global
-    else:
-        table = t.LT_global
-    row_local = np.nonzero(table[seg] == gid)[0]
-    if len(row_local) == 0:
-        return set()
-    r = int(row_local[0])
-    # full block (internal + external rows): reuse the cached batched block
-    M, L, _ = eng.cache.get((relation, seg)) or (None, None, None)
-    if M is None:
-        eng.get(relation, seg)  # populate cache
-        M, L, _ = eng.cache.get((relation, seg))
-    M = np.asarray(M)
-    L = np.asarray(L)
-    return set(int(x) for x in M[r][: L[r]] if x >= 0)
+        verts = pre.E[ids]                            # (n, 2) vertices
+        return pre.smesh.seg_of_vertex[verts].astype(np.int64)
+    if kind == "F":
+        fe = eng.boundary_FE(ids)                     # (n, 3) edge ids
+        return pre.owner_segment("E", fe).astype(np.int64)
+    tf = eng.boundary_TF(ids)                         # (n, 4) face ids
+    return pre.owner_segment("F", tf).astype(np.int64)
+
+
+def plan_completion(eng: RelationEngine, relation: str,
+                    ids: Sequence[int], prefetch: bool = True
+                    ) -> CompletionPlan:
+    """Vectorized fan-out planning for a whole query batch.
+
+    Dedups the (query, owner-segment) pairs, resolves each pair's local block
+    row via the inverse maps, and (by default) prefetches every distinct
+    ``(relation, segment)`` block in one non-blocking ``prefetch_many`` so
+    the producer runs while the consumer proceeds."""
+    assert relation in ADJ_COMPLETION_RELATIONS
+    if relation not in eng.relations:
+        raise ValueError(
+            f"completion of {relation!r} needs it in the engine's relation "
+            f"set (got {eng.relations}); construct the RelationEngine with "
+            f"it so the producer has a queue to serve the fan-out from")
+    kind = relation[0]
+    ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+    n = len(ids)
+    ns = eng.smesh.n_segments
+    if n == 0:
+        empty = np.zeros(0, dtype=np.int64)
+        return CompletionPlan(relation, ids, empty, empty,
+                              empty.astype(np.int32), empty)
+
+    owners = _boundary_owner_segments(eng, relation, ids)   # (n, k+1)
+    w = owners.shape[1]
+    qidx = np.repeat(np.arange(n, dtype=np.int64), w)
+    # dedup (query, segment) pairs across boundary faces in one unique pass
+    ukey = np.unique(qidx * ns + owners.reshape(-1))
+    pair_query = ukey // ns
+    pair_seg = ukey % ns
+    pair_row = eng.local_rows(kind, pair_seg, ids[pair_query])
+    # completion invariant (docs/DESIGN.md §5): every boundary-face owner's
+    # table contains the query simplex; tolerate (and skip) violations so
+    # the batched path degrades exactly like the scalar one
+    ok = pair_row >= 0
+    if not ok.all():
+        pair_query, pair_seg, pair_row = (
+            pair_query[ok], pair_seg[ok], pair_row[ok])
+    segments = np.unique(pair_seg)
+
+    eng.stats.completion_queries += n
+    eng.stats.completion_fanout_blocks += len(segments)
+    if prefetch:
+        eng.prefetch_many({relation: [int(s) for s in segments]})
+    return CompletionPlan(relation, ids, pair_query, pair_seg,
+                          pair_row.astype(np.int32), segments)
+
+
+def execute_completion(eng: RelationEngine, plan: CompletionPlan
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Gather + union the planned rows into padded ``(M, L)`` arrays.
+
+    Reads each distinct segment block once through ``get_full`` (blocking
+    only if the prefetched launch is still in flight), then performs the
+    union / self-removal / dedup / compaction as vectorized numpy ops.
+    Rows come out ascending — bit-identical to the scalar reference."""
+    n = len(plan.ids)
+    P = len(plan.pair_seg)
+    if P == 0:
+        return (np.full((n, 1), -1, dtype=np.int64),
+                np.zeros(n, dtype=np.int32))
+
+    # one gather per consulted segment (pairs pre-grouped by segment: the
+    # plan's unique-key pass sorted them by (query, segment); re-sort by
+    # segment so each block is sliced exactly once)
+    order = np.argsort(plan.pair_seg, kind="stable")
+    seg_sorted = plan.pair_seg[order]
+    lo = np.searchsorted(seg_sorted, plan.segments, side="left")
+    hi = np.searchsorted(seg_sorted, plan.segments, side="right")
+    deg = eng.deg[plan.relation]
+    vals = np.full((P, deg), -1, dtype=np.int64)
+    lens = np.zeros(P, dtype=np.int64)
+    for s, a, b in zip(plan.segments, lo, hi):
+        Mf, Lf = eng.get_full(plan.relation, int(s))
+        sel = order[a:b]
+        rows = plan.pair_row[sel]
+        width = min(deg, Mf.shape[1])
+        vals[sel, :width] = Mf[rows, :width]
+        lens[sel] = np.minimum(Lf[rows], width)
+
+    # flatten valid entries -> (query, neighbor) pairs
+    col = np.arange(deg, dtype=np.int64)
+    valid = (col[None, :] < lens[:, None]) & (vals >= 0)
+    nb = vals[valid]
+    q = np.broadcast_to(plan.pair_query[:, None], (P, deg))[valid]
+    raw = len(nb)
+    # remove the query simplex itself, then dedup per query (sorted)
+    keep = nb != plan.ids[q]
+    nb, q = nb[keep], q[keep]
+    if len(nb):
+        srt = np.lexsort((nb, q))
+        nb, q = nb[srt], q[srt]
+        first = np.ones(len(nb), dtype=bool)
+        first[1:] = (q[1:] != q[:-1]) | (nb[1:] != nb[:-1])
+        nb, q = nb[first], q[first]
+
+    counts = np.bincount(q, minlength=n) if len(nb) else np.zeros(n, np.int64)
+    width = max(int(counts.max()) if len(counts) else 0, 1)
+    M = np.full((n, width), -1, dtype=np.int64)
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    M[q, np.arange(len(nb)) - offsets[q]] = nb
+    L = counts.astype(np.int32)
+
+    eng.stats.completion_raw_neighbors += raw
+    eng.stats.completion_neighbors += len(nb)
+    return M, L
 
 
 def complete_adjacency(
-    eng: RelationEngine, relation: str, ids: Sequence[int]
+    eng: RelationEngine, relation: str, ids: Sequence[int],
+    batch: Optional[int] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Complete EE/FF/TT rows for global simplex ids. Returns padded (M, L).
-    """
-    assert relation in ("EE", "FF", "TT")
+
+    With ``batch=k`` the query list is processed in pipelined chunks: chunk
+    i+1 is planned (and its blocks prefetched) *before* chunk i is executed,
+    so relation production overlaps the gather/union work — the same
+    produce-ahead idiom the algorithm drivers use for every other relation.
+    The result is bit-identical for any ``batch``."""
+    ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+    if batch is None or batch <= 0 or batch >= len(ids):
+        return execute_completion(eng, plan_completion(eng, relation, ids))
+
+    chunks = [ids[i:i + batch] for i in range(0, len(ids), batch)]
+    plans = [plan_completion(eng, relation, chunks[0])]
+    outs = []
+    for i in range(len(chunks)):
+        if i + 1 < len(chunks):   # plan + prefetch ahead of the execute
+            plans.append(plan_completion(eng, relation, chunks[i + 1]))
+        outs.append(execute_completion(eng, plans[i]))
+    width = max(max(M.shape[1] for M, _ in outs), 1)
+    M = np.full((len(ids), width), -1, dtype=np.int64)
+    L = np.concatenate([Lc for _, Lc in outs])
+    at = 0
+    for Mc, Lc in outs:
+        M[at:at + len(Lc), : Mc.shape[1]] = Mc
+        at += len(Lc)
+    return M, L
+
+
+def complete_adjacency_scalar(
+    eng: RelationEngine, relation: str, ids: Sequence[int]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One-simplex-at-a-time reference for the batched pipeline.
+
+    Same union over boundary-face owner segments, but resolved with Python
+    sets and one blocking block read per (query, segment) pair. Kept for the
+    A/B benchmark and the bit-identical regression test; row lookups go
+    through the inverse maps, not table scans."""
+    assert relation in ADJ_COMPLETION_RELATIONS
     kind = relation[0]
-    pre = eng.pre
-    sm = pre.smesh
-
-    # boundary (k-1)-faces of each simplex -> owner segments to consult
-    if kind == "E":
-        verts = pre.E[np.asarray(ids)]                # (n, 2) vertices
-        owners = sm.seg_of_vertex[verts]              # (n, 2)
-    elif kind == "F":
-        fe = eng.boundary_FE(ids)                     # (n, 3) edge ids
-        owners = pre.owner_segment("E", fe)
-    else:
-        tf = eng.boundary_TF(ids)                     # (n, 4) face ids
-        owners = pre.owner_segment("F", tf)
-
-    # prefetch all needed segment blocks in one batched request
-    uniq = sorted(set(int(s) for s in owners.reshape(-1)))
-    eng.get_batch(relation, uniq)
-
+    ids = np.asarray(ids, dtype=np.int64).reshape(-1)
+    owners = (_boundary_owner_segments(eng, relation, ids)
+              if len(ids) else np.zeros((0, 1), np.int64))
     rows = []
     for i, gid in enumerate(ids):
         acc: set = set()
-        for s in set(int(x) for x in owners[i]):
-            acc |= _local_row(eng, relation, kind, s, int(gid))
+        for s in sorted(set(int(x) for x in owners[i])):
+            r = int(eng.local_rows(kind, np.array([s]), np.array([gid]))[0])
+            if r < 0:
+                continue
+            Mf, Lf = eng.get_full(relation, s)
+            acc |= set(int(x) for x in Mf[r][: Lf[r]] if x >= 0)
         acc.discard(int(gid))
         rows.append(sorted(acc))
     deg = max((len(r) for r in rows), default=1)

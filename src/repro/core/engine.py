@@ -64,6 +64,23 @@ from .segtables import (
 
 @dataclasses.dataclass
 class EngineStats:
+    """Engine accounting (paper Tables 5/6/7 + Fig. 10). Counter semantics:
+
+    - ``requests``: simplex-block reads issued through :meth:`RelationEngine.
+      get` / ``get_batch`` / ``get_full`` (one per (relation, segment) read).
+    - ``cache_hits`` / ``cache_misses``: whether a read found its block
+      already produced (or in flight — ``inflight_hits`` is that subset).
+    - ``kernel_launches`` / ``segments_produced``: producer-side dispatch
+      counts. A segment is never produced twice for the same relation, so
+      ``segments_produced`` is also the number of distinct blocks computed.
+    - ``completion_*``: cross-segment adjacency completion
+      (``core/adjacency.py``): completed queries, fan-out block
+      consultations (distinct per plan; a chunked completion that consults
+      the same block from several chunks counts it once per chunk), and raw
+      vs deduplicated neighbor entries (the dedup ratio quantifies how much
+      cross-segment overlap the union removed).
+    """
+
     requests: int = 0
     kernel_launches: int = 0
     segments_produced: int = 0
@@ -71,6 +88,11 @@ class EngineStats:
     inflight_hits: int = 0   # subset of cache_hits served from in-flight
     cache_misses: int = 0
     evictions: int = 0
+    # Cross-segment adjacency completion (core/adjacency.py).
+    completion_queries: int = 0        # simplex ids completed
+    completion_fanout_blocks: int = 0  # block consultations (see docstring)
+    completion_raw_neighbors: int = 0  # gathered entries before dedup/self
+    completion_neighbors: int = 0      # entries in the final completed rows
     # Waiting-time breakdown (seconds), paper Fig. 10 phases.
     t_enqueue: float = 0.0
     t_queue: float = 0.0
@@ -79,8 +101,18 @@ class EngineStats:
     t_sync: float = 0.0      # time the consumer waited on in-flight results
     t_integrate: float = 0.0
 
+    @property
+    def completion_dedup_ratio(self) -> float:
+        """Raw gathered entries per surviving completed entry (>= 1.0 once
+        any completion ran; 0.0 before)."""
+        if self.completion_neighbors == 0:
+            return 0.0
+        return self.completion_raw_neighbors / self.completion_neighbors
+
     def as_dict(self) -> Dict[str, float]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["completion_dedup_ratio"] = self.completion_dedup_ratio
+        return d
 
 
 class _SegmentCache:
@@ -194,11 +226,32 @@ class RelationEngine:
         if t.F_local is not None:
             self._dev["F_local"] = jnp.asarray(t.F_local)
             self._dev["LF_global"] = jnp.asarray(t.LF_global)
+        # Device-resident inverse maps (docs/DESIGN.md §5): per-kind sorted
+        # (segment, gid) appearance lists mirroring tables.inverse, stored as
+        # i32 (seg, gid, row) columns so accelerator-side gathers can resolve
+        # cross-segment rows without x64. Staged for the pallas completion
+        # gather path; the xla completion pipeline resolves rows host-side
+        # through :meth:`local_rows` (i64-keyed binary search).
+        if t.inverse:
+            for kind, (keys, rows, n_glob) in t.inverse.items():
+                if kind == "V":   # completion only spans E/F/T kinds
+                    continue
+                self._dev[f"inv_seg_{kind}"] = jnp.asarray(
+                    (keys // n_glob).astype(np.int32))
+                self._dev[f"inv_gid_{kind}"] = jnp.asarray(
+                    (keys % n_glob).astype(np.int32))
+                self._dev[f"inv_row_{kind}"] = jnp.asarray(rows)
 
     # -- consumer-side API --------------------------------------------------
 
     def request(self, relation: str, segments: Sequence[int]) -> None:
-        """Non-blocking enqueue (consumer -> leader queue)."""
+        """Non-blocking enqueue (consumer -> leader queue).
+
+        Never blocks and never launches a kernel: it only appends traversal
+        hints to the per-relation pending queue. De-dup guarantee: a segment
+        already cached, in flight, or pending is not enqueued again, so a
+        block is never produced twice no matter how often it is requested.
+        """
         t0 = time.perf_counter()
         q = self.queues[relation]
         qs = set(q)
@@ -212,17 +265,45 @@ class RelationEngine:
         self.stats.t_enqueue += time.perf_counter() - t0
 
     def get(self, relation: str, segment: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Blocking fetch of the (M, L) relation block for one segment.
+        """Fetch the (M, L) relation block for one segment.
 
         Rows are the segment's *internal* simplices of the relation's subject
-        kind, in global-id order starting at ``interval[kind][segment]``."""
+        kind, in global-id order starting at ``interval[kind][segment]``.
+
+        Blocking behavior: returns immediately on a cache hit; on an
+        in-flight hit it blocks only until that launch's device arrays are
+        ready (the wait lands in ``stats.t_sync``); on a miss it queue-jumps
+        the segment, dispatches one batched launch, and waits for it.
+        De-dup guarantee: a miss never re-produces segments that are cached
+        or in flight — only genuinely missing ones enter the launch."""
         segment = int(segment)
         self.stats.requests += 1
         self._count(relation, segment)
         return self._fetch(relation, segment)
 
+    def get_full(self, relation: str, segment: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Like :meth:`get`, but returns ALL local rows of the block —
+        internal simplices first (global-id order), then the segment's
+        external simplices, then table padding (rows with ``L == 0``).
+
+        Cross-segment adjacency completion reads external rows through this
+        method, so misses take the normal dispatch path and are counted in
+        ``stats.cache_misses`` (never silently served as empty). Blocking
+        behavior and de-dup guarantee are identical to :meth:`get`."""
+        segment = int(segment)
+        self.stats.requests += 1
+        self._count(relation, segment)
+        return self._fetch(relation, segment, full=True)
+
     def get_batch(self, relation: str, segments: Sequence[int]):
-        """Fetch several segments; produces misses in one batched launch."""
+        """Fetch several segments' (M, L) blocks as a list.
+
+        All misses are enqueued first and produced in one batched launch
+        (plus lookahead), then each block is read as in :meth:`get`; the
+        call blocks until every requested block is ready. Duplicate segment
+        ids in ``segments`` are served from the same produced block — the
+        de-dup guarantee is per ``(relation, segment)``, not per call."""
         segments = [int(s) for s in segments]
         self.stats.requests += len(segments)
         for s in segments:
@@ -236,19 +317,35 @@ class RelationEngine:
         return [self._fetch(relation, s) for s in segments]
 
     def prefetch(self, relation: str, segments: Sequence[int]) -> None:
-        """Traversal-order hint: enqueue + dispatch without blocking (the
-        consumer keeps running; the launch lands in the in-flight table)."""
+        """Traversal-order hint: enqueue + dispatch without blocking.
+
+        Returns as soon as the kernels are *dispatched*; the launches land in
+        the in-flight futures table and retire either opportunistically
+        (when a later call finds them ready) or at the first blocking read.
+        Segments already cached / in flight / pending are skipped entirely
+        (de-dup), so repeated prefetch of a traversal window is free."""
         self.request(relation, segments)
         self._drain([relation])
 
     def prefetch_many(self, requests: Dict[str, Sequence[int]]) -> None:
-        """Prefetch several relations at once; launches are dispatched
-        round-robin across relations so their kernels are all in flight
-        before the consumer resumes."""
+        """Prefetch several relations at once without blocking; launches are
+        dispatched round-robin across relations so their kernels are all in
+        flight before the consumer resumes. Equivalent to one
+        :meth:`prefetch` per relation but interleaves dispatch fairly;
+        unknown relations are ignored. Same de-dup guarantee as
+        :meth:`prefetch`."""
         for r, segs in requests.items():
             if r in self.queues:
                 self.request(r, segs)
         self._drain([r for r in requests if r in self.queues])
+
+    def local_rows(self, kind: str, segs: np.ndarray,
+                   gids: np.ndarray) -> np.ndarray:
+        """Vectorized ``(segment, global id) -> local block row`` for simplex
+        kind ``V``/``E``/``F``/``T`` (``-1`` where absent) via the inverse
+        maps built at table time — the row index to use with
+        :meth:`get_full`. Host-side, non-blocking."""
+        return self.tables.local_rows(kind, segs, gids)
 
     # -- leader-producer side -----------------------------------------------
 
@@ -262,10 +359,11 @@ class RelationEngine:
         else:
             self.stats.cache_misses += 1
 
-    def _fetch(self, relation: str, segment: int
+    def _fetch(self, relation: str, segment: int, full: bool = False
                ) -> Tuple[np.ndarray, np.ndarray]:
         """Stat-free read: serve from cache, else sync the in-flight launch,
-        else queue-jump + dispatch + sync. Used by get() and get_batch()."""
+        else queue-jump + dispatch + sync. Used by get()/get_full()/
+        get_batch(); ``full`` keeps external + padding rows."""
         key = (relation, segment)
         while True:
             hit = self.cache.get(key)
@@ -290,7 +388,10 @@ class RelationEngine:
             # which case it must be re-dispatched, now at the batch front
         M, L, n_rows = hit
         t0 = time.perf_counter()
-        out = (np.asarray(M[:n_rows]), np.asarray(L[:n_rows]))
+        if full:
+            out = (np.asarray(M), np.asarray(L))
+        else:
+            out = (np.asarray(M[:n_rows]), np.asarray(L[:n_rows]))
         self.stats.t_integrate += time.perf_counter() - t0
         return out
 

@@ -97,6 +97,12 @@ class SegmentTables:
     LF_global: Optional[np.ndarray] = None  # (ns, NF)
     n_int_f: Optional[np.ndarray] = None
     n_loc_f: Optional[np.ndarray] = None
+    # Inverse maps, built once at table time (docs/DESIGN.md §5): for each
+    # simplex kind, every (segment, global id) appearance in the local tables
+    # packed as a sorted key array so `(segment, gid) -> local row` resolves
+    # with one binary search instead of scanning the table. Per kind:
+    # (sorted_keys i64 [seg * n_global + gid], rows i32, n_global).
+    inverse: Optional[Dict[str, Tuple[np.ndarray, np.ndarray, int]]] = None
 
     @property
     def NV(self) -> int:
@@ -139,6 +145,22 @@ class SegmentTables:
             "F": (self.n_int_f, self.n_loc_f),
             "T": (self.n_int_t, self.n_loc_t),
         }[kind]
+
+    def local_rows(self, kind: str, segs: np.ndarray,
+                   gids: np.ndarray) -> np.ndarray:
+        """Vectorized ``(segment, global id) -> local table row`` for one
+        simplex kind; ``-1`` where the simplex does not appear in that
+        segment's local table. One batched binary search over the inverse
+        map — no per-query table scans (docs/DESIGN.md §5)."""
+        if self.inverse is None or kind not in self.inverse:
+            raise KeyError(f"no inverse map for kind {kind!r}")
+        keys, rows, n_glob = self.inverse[kind]
+        q = (np.asarray(segs, dtype=np.int64) * n_glob
+             + np.asarray(gids, dtype=np.int64))
+        if len(keys) == 0:
+            return np.full(q.shape, -1, dtype=np.int32)
+        pos = np.minimum(np.searchsorted(keys, q), len(keys) - 1)
+        return np.where(keys[pos] == q, rows[pos], -1)
 
 
 @dataclasses.dataclass
@@ -316,4 +338,31 @@ def _build_segment_tables(pre: Preconditioned) -> SegmentTables:
         tabs.LF_global = pad1([e["lf"] for e in per_seg], NF)
         tabs.n_int_f = np.array([e["n_int_f"] for e in per_seg], np.int32)
         tabs.n_loc_f = np.array([len(e["lf"]) for e in per_seg], np.int32)
+    tabs.inverse = _build_inverse_maps(tabs, pre)
     return tabs
+
+
+def _build_inverse_maps(
+    tabs: SegmentTables, pre: Preconditioned,
+) -> Dict[str, Tuple[np.ndarray, np.ndarray, int]]:
+    """One-time inversion of the L?_global tables: every (segment, gid)
+    appearance keyed as ``seg * n_global + gid`` and sorted, so cross-segment
+    completion resolves `(segment, gid) -> local row` by binary search."""
+    n_global = {
+        "V": pre.smesh.n_vertices,
+        "E": pre.n_edges,
+        "F": pre.n_faces,
+        "T": pre.smesh.n_tets,
+    }
+    out: Dict[str, Tuple[np.ndarray, np.ndarray, int]] = {}
+    for kind, glob in (("V", tabs.LV_global), ("E", tabs.LE_global),
+                       ("F", tabs.LF_global), ("T", tabs.LT_global)):
+        if glob is None:
+            continue
+        seg_idx, row_idx = np.nonzero(glob >= 0)
+        keys = (seg_idx.astype(np.int64) * n_global[kind]
+                + glob[seg_idx, row_idx].astype(np.int64))
+        order = np.argsort(keys)
+        out[kind] = (keys[order], row_idx[order].astype(np.int32),
+                     n_global[kind])
+    return out

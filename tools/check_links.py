@@ -1,0 +1,63 @@
+"""Check that intra-repo markdown links resolve.
+
+Scans every tracked ``*.md`` file for inline links/images and verifies that
+relative targets exist on disk (external URLs and pure anchors are skipped).
+Used by the CI docs job and ``tests/test_docs.py``.
+
+  python tools/check_links.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List, Tuple
+
+# inline markdown links/images: [text](target) / ![alt](target)
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+_SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "experiments"}
+
+
+def markdown_files(root: str) -> List[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+        out.extend(os.path.join(dirpath, f) for f in filenames
+                   if f.endswith(".md"))
+    return sorted(out)
+
+
+def broken_links(root: str) -> List[Tuple[str, str]]:
+    """(markdown file, unresolved target) pairs across the repo."""
+    bad = []
+    for md in markdown_files(root):
+        text = open(md, encoding="utf-8").read()
+        for target in _LINK_RE.findall(text):
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = os.path.normpath(os.path.join(os.path.dirname(md),
+                                                     path))
+            if not os.path.exists(resolved):
+                bad.append((os.path.relpath(md, root), target))
+    return bad
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..")
+    bad = broken_links(root)
+    for md, target in bad:
+        print(f"BROKEN {md}: {target}")
+    n = len(markdown_files(root))
+    print(f"checked {n} markdown files: "
+          f"{'OK' if not bad else f'{len(bad)} broken link(s)'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
