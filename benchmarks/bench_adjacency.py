@@ -1,21 +1,27 @@
-"""Batched vs scalar cross-segment adjacency completion (core/adjacency.py).
+"""Scalar vs host-batched vs device cross-segment adjacency completion
+(core/adjacency.py + kernels/completion_gather.py).
 
-For each adjacency relation (EE/FF/TT) the same query set is completed twice
-on fresh engines:
+For each adjacency relation (EE/FF/TT) the same query set is completed three
+times on fresh engines:
 
   - ``scalar``  : :func:`complete_adjacency_scalar` — per-simplex Python
     union, one blocking block read per (query, segment) pair (the shape of
     the pre-batched code path);
-  - ``batched`` : :func:`complete_adjacency` — vectorized fan-out, one
-    ``prefetch_many`` per chunk, vectorized union/dedup/compaction.
+  - ``host``    : :func:`complete_adjacency(..., path="host")` — vectorized
+    fan-out, one ``prefetch_many`` per chunk, numpy union/dedup/compaction,
+    one ``np.asarray`` block read per consulted segment;
+  - ``device``  : :func:`complete_adjacency(..., path="device")` — the GALE
+    path: blocks stay on the accelerator (engine device pool), rows resolve
+    by batched binary search over the device inverse maps, union/dedup/
+    compaction on device, ONE host round trip per chunk.
 
-Both arms get an untimed warmup over the full query set so neither pays jit
+Every arm gets an untimed warmup over the full query set so none pays jit
 compilation or first-touch block production — the timed section compares the
-completion machinery itself (fan-out planning, row gather, union/dedup/
-compaction) on hot blocks, which is what differs between the two paths. Each
-pair emits a ``speedup`` row plus a verification row asserting the two
-paths' (M, L) arrays are bit-identical. Completion counters (fan-out blocks,
-dedup ratio) come from the engine stats of the batched arm.
+completion machinery itself on hot blocks. Each relation emits ``speedup``
+rows (scalar/host and host/device) plus a verification row asserting all
+three paths' (M, L) arrays are bit-identical. Completion counters (fan-out
+blocks, dedup ratio, device-pool hits) come from the engine stats of the
+timed arms.
 """
 
 from __future__ import annotations
@@ -57,27 +63,49 @@ def run(quick: bool = True) -> List[str]:
         t_scalar, (Ms, Ls) = common.timed(
             complete_adjacency_scalar, eng_s, relation, ids)
 
+        # warmups use the SAME chunking as the timed run so the device arm's
+        # jit shapes (n/P/S power-of-two buckets per chunk) are all compiled
+        # before the timer starts
         eng_b = common.make_ds("gale", pre, BENCH_RELS)
-        complete_adjacency(eng_b, relation, ids)           # untimed warmup
+        complete_adjacency(eng_b, relation, ids, 128, "host")   # warmup
         eng_b.stats = type(eng_b.stats)()                  # count timed run
-        t_batch, (Mb, Lb) = common.timed(
-            complete_adjacency, eng_b, relation, ids, 128)
+        t_host, (Mb, Lb) = common.timed(
+            complete_adjacency, eng_b, relation, ids, 128, "host")
 
-        identical = (np.array_equal(Ms, Mb) and np.array_equal(Ls, Lb))
+        eng_d = common.make_ds("gale", pre, BENCH_RELS)
+        complete_adjacency(eng_d, relation, ids, 128, "device")  # warmup
+        eng_d.stats = type(eng_d.stats)()
+        t_dev, (Md, Ld) = common.timed(
+            complete_adjacency, eng_d, relation, ids, 128, "device")
+
+        identical = (np.array_equal(Ms, Mb) and np.array_equal(Ls, Lb)
+                     and np.array_equal(Ms, Md) and np.array_equal(Ls, Ld))
         st = eng_b.stats
+        sd = eng_d.stats
         rows.append(common.row(
             f"adjacency/{relation}/{dataset}/scalar", t_scalar,
             f"queries={len(ids)}"))
         rows.append(common.row(
-            f"adjacency/{relation}/{dataset}/batched", t_batch,
+            f"adjacency/{relation}/{dataset}/host", t_host,
             f"queries={len(ids)};"
             f"fanout_blocks={st.completion_fanout_blocks};"
             f"dedup_ratio={st.completion_dedup_ratio:.3f}"))
         rows.append(common.row(
-            f"adjacency/{relation}/{dataset}/speedup",
-            t_scalar / max(t_batch, 1e-9),
-            f"scalar_s={t_scalar:.4f};batched_s={t_batch:.4f};"
-            f"speedup={t_scalar / max(t_batch, 1e-9):.2f}x"))
+            f"adjacency/{relation}/{dataset}/device", t_dev,
+            f"queries={len(ids)};"
+            f"devpool_hits={sd.devpool_hits};"
+            f"devpool_uploads={sd.devpool_uploads};"
+            f"dedup_ratio={sd.completion_dedup_ratio:.3f}"))
+        rows.append(common.row(
+            f"adjacency/{relation}/{dataset}/speedup_host_vs_scalar",
+            t_scalar / max(t_host, 1e-9),
+            f"scalar_s={t_scalar:.4f};host_s={t_host:.4f};"
+            f"speedup={t_scalar / max(t_host, 1e-9):.2f}x"))
+        rows.append(common.row(
+            f"adjacency/{relation}/{dataset}/speedup_device_vs_host",
+            t_host / max(t_dev, 1e-9),
+            f"host_s={t_host:.4f};device_s={t_dev:.4f};"
+            f"speedup={t_host / max(t_dev, 1e-9):.2f}x"))
         rows.append(common.row(
             f"adjacency/{relation}/{dataset}/bit_identical", 0.0,
             f"identical={identical}"))

@@ -134,6 +134,10 @@ def _classify_batch(
     t = jnp.where((nl <= 1) & (nu >= 2), SADDLE2, t)
     t = jnp.where(nl == 0, MINIMUM, t)
     t = jnp.where(nu == 0, MAXIMUM, t)
+    # an isolated vertex (empty link: no lower AND no upper component) has
+    # no Banchoff classification — flag DEGENERATE, never MAXIMUM, matching
+    # fused_extrema's has_nbr exclusion (core/pipeline.py)
+    t = jnp.where((nl == 0) & (nu == 0), DEGENERATE, t)
     return t
 
 

@@ -17,17 +17,25 @@ with a plan/execute split:
     (``SegmentTables.inverse`` — no per-query table scans), and issues ONE
     :meth:`RelationEngine.prefetch_many` for every block the batch needs, so
     production overlaps with whatever the consumer does next.
-  - :func:`execute_completion` gathers the planned rows from the produced
-    blocks (one :meth:`RelationEngine.get_full` per distinct segment) and
-    performs the row union / self-removal / dedup / compaction as vectorized
-    numpy ops straight into the paper's padded ``(M, L)`` layout.
+  - :func:`execute_completion_device` — the GALE path — keeps the gather on
+    the accelerator: it stacks the consulted blocks from the engine's device
+    block pool (:meth:`RelationEngine.get_full_dev`), re-resolves every
+    (segment, gid) pair to its row by batched binary search over the DEVICE
+    inverse maps, and unions/dedups/compacts on device
+    (``kernels/completion_gather.py``) — ONE host round trip per batch.
+  - :func:`execute_completion` is the host reference: one
+    :meth:`RelationEngine.get_full` per distinct segment, union as
+    vectorized numpy ops. Kept for the A/B benchmark and for data
+    structures without a device pool (e.g. the explicit baseline).
 
-:func:`complete_adjacency` drives both; with ``batch=`` it pipelines chunks
-(plan + prefetch chunk k+1 before executing chunk k), which is how the
-algorithm drivers request completed adjacency. Completion work is accounted
-in ``EngineStats`` (``completion_queries``, ``completion_fanout_blocks``,
-``completion_raw_neighbors`` / ``completion_neighbors`` and the derived
-``completion_dedup_ratio``).
+:func:`complete_adjacency` drives plan + execute; ``path=`` selects the
+execute arm ("device" by default on engines exposing ``get_full_dev``,
+"host" otherwise) and ``batch=`` pipelines chunks (plan + prefetch chunk
+k+1 before executing chunk k), which is how the algorithm drivers request
+completed adjacency. Both paths are bit-identical for any chunking.
+Completion work is accounted in ``EngineStats`` (``completion_queries``,
+``completion_fanout_blocks``, ``completion_raw_neighbors`` /
+``completion_neighbors`` and the derived ``completion_dedup_ratio``).
 
 :func:`complete_adjacency_scalar` is the one-simplex-at-a-time reference kept
 for the A/B benchmark (``benchmarks/bench_adjacency.py``) and the
@@ -39,9 +47,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from .engine import RelationEngine
+from ..kernels import ops
+from .engine import RelationEngine, RelationWidthError
 
 ADJ_COMPLETION_RELATIONS = ("EE", "FF", "TT")
 
@@ -187,20 +198,120 @@ def execute_completion(eng: RelationEngine, plan: CompletionPlan
     return M, L
 
 
+# Max (query, segment) pairs per query = number of boundary (k-1)-faces.
+_PAIR_WIDTH = {"E": 2, "F": 3, "T": 4}
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def execute_completion_device(eng: RelationEngine, plan: CompletionPlan
+                              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Device-side gather + union of the planned rows (the GALE path).
+
+    Stacks the consulted blocks from the engine's device block pool
+    (``get_full_dev`` — blocking only on launches still in flight),
+    re-resolves every (segment, gid) pair to its block row by batched binary
+    search over the DEVICE inverse maps, and performs the union /
+    self-removal / dedup / compaction on the accelerator
+    (``kernels/completion_gather.py``, backend per ``eng.backend``). One
+    host round trip per batch; bit-identical to :func:`execute_completion`.
+
+    Raises :class:`RelationWidthError` if a completed row would overflow
+    ``deg[relation]`` (the preallocated relation-array width)."""
+    if not hasattr(eng, "get_full_dev"):
+        raise TypeError(
+            "the device completion path needs a RelationEngine (device "
+            "block pool + device inverse maps); use path='host' for "
+            f"{type(eng).__name__}")
+    n = len(plan.ids)
+    P = len(plan.pair_seg)
+    if P == 0:
+        return (np.full((n, 1), -1, dtype=np.int64),
+                np.zeros(n, dtype=np.int32))
+    relation = plan.relation
+    kind = relation[0]
+    deg = eng.deg[relation]
+    w = _PAIR_WIDTH[kind]
+
+    # device block pool, padded to a power-of-two slot count (padding
+    # repeats slot 0; no pair references it) so jit sees stable shapes
+    pool_M, pool_L = eng.get_full_dev_batch(
+        relation, plan.segments, pad_to=_pow2(len(plan.segments)))
+
+    slot = np.searchsorted(plan.segments, plan.pair_seg).astype(np.int32)
+    # per-query pair positions (pairs come sorted by query from the plan's
+    # unique pass) -> the (n, w) pair_at gather map
+    counts_p = np.bincount(plan.pair_query, minlength=n)
+    off = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts_p, out=off[1:])
+    pos = np.arange(P, dtype=np.int64) - off[plan.pair_query]
+    pair_at = np.full((_pow2(n), w), -1, dtype=np.int32)
+    pair_at[plan.pair_query, pos] = np.arange(P, dtype=np.int32)
+
+    # pad pairs to a power-of-two bucket with inert entries (slot == -1)
+    P_pad = _pow2(P)
+    pad = P_pad - P
+    pair_slot = np.concatenate([slot, np.full(pad, -1, np.int32)])
+    pair_seg = np.concatenate(
+        [plan.pair_seg.astype(np.int32), np.zeros(pad, np.int32)])
+    pair_gid = np.concatenate(
+        [plan.ids[plan.pair_query].astype(np.int32),
+         np.full(pad, -1, np.int32)])
+
+    inv_seg, inv_gid, inv_row, inv_key, n_glob = eng.dev_inverse(kind)
+    M_dev, L_dev, raw, kept = ops.completion_gather(
+        pool_M, pool_L, inv_seg, inv_gid, inv_row,
+        jnp.asarray(pair_slot), jnp.asarray(pair_seg),
+        jnp.asarray(pair_gid), jnp.asarray(pair_at),
+        deg_out=deg, backend=eng.backend, inv_key=inv_key, n_global=n_glob)
+
+    Mh = np.asarray(M_dev)[:n]          # the batch's ONE host round trip
+    Lh = np.asarray(L_dev)[:n]
+    worst = int(Lh.max()) if n else 0
+    if worst > deg:
+        raise RelationWidthError(
+            f"completed {relation!r} row has {worst} neighbours but the "
+            f"preallocated width is deg[{relation!r}]={deg}; construct the "
+            f"engine with deg={{{relation!r}: {worst}}} (or larger).")
+    width = max(worst, 1)
+    M = Mh[:, :width].astype(np.int64)
+    L = Lh.astype(np.int32)
+    eng.stats.completion_raw_neighbors += int(raw)
+    eng.stats.completion_neighbors += int(kept)
+    return M, L
+
+
 def complete_adjacency(
     eng: RelationEngine, relation: str, ids: Sequence[int],
-    batch: Optional[int] = None,
+    batch: Optional[int] = None, path: Optional[str] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Complete EE/FF/TT rows for global simplex ids. Returns padded (M, L).
+
+    ``path`` selects the execute arm: ``"device"`` gathers/unions on the
+    accelerator (:func:`execute_completion_device`), ``"host"`` in numpy
+    (:func:`execute_completion`); ``None`` auto-selects "device" when the
+    data structure exposes a device block pool (``get_full_dev``) AND a
+    real accelerator backs the arrays — on CPU-only jax the device arm
+    would only pay XLA dispatch overhead, so the host arm stays the
+    default there. Both arms are bit-identical.
 
     With ``batch=k`` the query list is processed in pipelined chunks: chunk
     i+1 is planned (and its blocks prefetched) *before* chunk i is executed,
     so relation production overlaps the gather/union work — the same
     produce-ahead idiom the algorithm drivers use for every other relation.
     The result is bit-identical for any ``batch``."""
+    if path is None:
+        path = ("device" if hasattr(eng, "get_full_dev")
+                and jax.default_backend() != "cpu" else "host")
+    if path not in ("host", "device"):
+        raise ValueError(f"path must be 'host' or 'device', got {path!r}")
+    execute = (execute_completion_device if path == "device"
+               else execute_completion)
     ids = np.asarray(ids, dtype=np.int64).reshape(-1)
     if batch is None or batch <= 0 or batch >= len(ids):
-        return execute_completion(eng, plan_completion(eng, relation, ids))
+        return execute(eng, plan_completion(eng, relation, ids))
 
     chunks = [ids[i:i + batch] for i in range(0, len(ids), batch)]
     plans = [plan_completion(eng, relation, chunks[0])]
@@ -208,7 +319,7 @@ def complete_adjacency(
     for i in range(len(chunks)):
         if i + 1 < len(chunks):   # plan + prefetch ahead of the execute
             plans.append(plan_completion(eng, relation, chunks[i + 1]))
-        outs.append(execute_completion(eng, plans[i]))
+        outs.append(execute(eng, plans[i]))
     width = max(max(M.shape[1] for M, _ in outs), 1)
     M = np.full((len(ids), width), -1, dtype=np.int64)
     L = np.concatenate([Lc for _, Lc in outs])

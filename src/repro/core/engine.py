@@ -88,6 +88,10 @@ class EngineStats:
     inflight_hits: int = 0   # subset of cache_hits served from in-flight
     cache_misses: int = 0
     evictions: int = 0
+    # Device block pool (get_full_dev): reads served from still-device-
+    # resident launch results vs host-cache blocks re-uploaded to device.
+    devpool_hits: int = 0
+    devpool_uploads: int = 0
     # Cross-segment adjacency completion (core/adjacency.py).
     completion_queries: int = 0        # simplex ids completed
     completion_fanout_blocks: int = 0  # block consultations (see docstring)
@@ -113,6 +117,13 @@ class EngineStats:
         d = dataclasses.asdict(self)
         d["completion_dedup_ratio"] = self.completion_dedup_ratio
         return d
+
+
+class RelationWidthError(ValueError):
+    """A produced relation row holds more entries than the preallocated
+    relation-array width ``deg[relation]`` (paper §4.6): the compacted ``M``
+    row would silently drop neighbours. Raised by
+    :meth:`RelationEngine._integrate` with the ``deg=`` override to use."""
 
 
 class _SegmentCache:
@@ -146,6 +157,58 @@ class _SegmentCache:
 
     def __len__(self):
         return len(self._store)
+
+
+class _DevBlockPool:
+    """LRU pool of still-device-resident produced blocks for the completion
+    gather path (docs/DESIGN.md §5).
+
+    An entry referencing a retained launch pins the launch's WHOLE padded
+    device array, so the pool is bounded by **backing arrays** (launches),
+    not entries — capacity then honestly measures device memory. Evicting a
+    backing array drops every segment entry it served; the host cache keeps
+    the data, so evicted blocks fall back to a one-time re-upload."""
+
+    def __init__(self, max_arrays: int):
+        self.max_arrays = max(1, max_arrays)
+        # id(M) -> (M, L, set of (relation, segment) keys served)
+        self._arrays: "collections.OrderedDict[int, tuple]" = (
+            collections.OrderedDict())
+        self._entries: Dict[Tuple[str, int], Tuple[int, Optional[int]]] = {}
+        self.evictions = 0
+
+    def get(self, key):
+        ent = self._entries.get(key)
+        if ent is None:
+            return None
+        aid, i = ent
+        self._arrays.move_to_end(aid)
+        M, L, _ = self._arrays[aid]
+        return M, L, i
+
+    def put(self, key, M, L, i) -> None:
+        aid = id(M)
+        if aid not in self._arrays:
+            self._arrays[aid] = (M, L, set())
+        self._arrays.move_to_end(aid)
+        old = self._entries.get(key)
+        if old is not None and old[0] != aid:
+            arr = self._arrays.get(old[0])
+            if arr is not None:
+                arr[2].discard(key)
+        self._arrays[aid][2].add(key)
+        self._entries[key] = (aid, i)
+        while len(self._arrays) > self.max_arrays:
+            _, (_, _, keys) = self._arrays.popitem(last=False)
+            for k in keys:
+                self._entries.pop(k, None)
+            self.evictions += 1
+
+    def __contains__(self, key):
+        return key in self._entries
+
+    def __len__(self):
+        return len(self._entries)
 
 
 class _Launch:
@@ -184,6 +247,7 @@ class RelationEngine:
         deg: Optional[Dict[str, int]] = None,
         async_dispatch: bool = True,
         inflight_max: int = 8,
+        dev_pool_segments: int = 256,
     ):
         if pre.tables is None:
             raise ValueError("precondition(..., build_tables=True) required")
@@ -211,6 +275,16 @@ class RelationEngine:
         # the first read that needs them (or opportunistically when ready).
         self._inflight: Dict[Tuple[str, int], _Launch] = {}
         self._flights: "collections.deque[_Launch]" = collections.deque()
+        # Device block pool (docs/DESIGN.md §5): still-device-resident full
+        # (M, L) blocks for the completion gather path. Entries reference
+        # retained launch arrays (idx row) or one-block uploads (idx None);
+        # the pool is bounded by backing launches — ``dev_pool_segments``
+        # is a segment budget converted at launch granularity, so the
+        # device-memory bound is honest even though one entry can pin a
+        # whole ``batch_max``-segment launch. Evictions only drop device
+        # references; the host cache keeps the data.
+        self._dev_pool = _DevBlockPool(
+            max(1, dev_pool_segments // max(1, batch_max)))
         self.stats = EngineStats()
 
         # Device-resident stacked tables (copied once, like the paper copying
@@ -229,9 +303,11 @@ class RelationEngine:
         # Device-resident inverse maps (docs/DESIGN.md §5): per-kind sorted
         # (segment, gid) appearance lists mirroring tables.inverse, stored as
         # i32 (seg, gid, row) columns so accelerator-side gathers can resolve
-        # cross-segment rows without x64. Staged for the pallas completion
-        # gather path; the xla completion pipeline resolves rows host-side
-        # through :meth:`local_rows` (i64-keyed binary search).
+        # cross-segment rows without x64. The device completion gather path
+        # (kernels/completion_gather.py) binary-searches these; when the
+        # combined key ``seg * n_global + gid`` fits i32 it is additionally
+        # staged as ``inv_key_*`` so the xla oracle is one jnp.searchsorted.
+        self._inv_nglob: Dict[str, int] = {}
         if t.inverse:
             for kind, (keys, rows, n_glob) in t.inverse.items():
                 if kind == "V":   # completion only spans E/F/T kinds
@@ -241,6 +317,10 @@ class RelationEngine:
                 self._dev[f"inv_gid_{kind}"] = jnp.asarray(
                     (keys % n_glob).astype(np.int32))
                 self._dev[f"inv_row_{kind}"] = jnp.asarray(rows)
+                self._inv_nglob[kind] = int(n_glob)
+                if len(keys) == 0 or int(keys[-1]) < 2 ** 31:
+                    self._dev[f"inv_key_{kind}"] = jnp.asarray(
+                        keys.astype(np.int32))
 
     # -- consumer-side API --------------------------------------------------
 
@@ -295,6 +375,104 @@ class RelationEngine:
         self.stats.requests += 1
         self._count(relation, segment)
         return self._fetch(relation, segment, full=True)
+
+    def get_full_dev(self, relation: str, segment: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Like :meth:`get_full`, but returns DEVICE arrays — the block stays
+        on the accelerator for the device completion gather path
+        (``kernels/completion_gather.py``), with no ``np.asarray`` round
+        trip.
+
+        Blocks still resident from their launch are served from the device
+        block pool (``stats.devpool_hits``); blocks only present in the host
+        cache are uploaded once and pooled (``stats.devpool_uploads``).
+        Misses take the normal dispatch path and are counted exactly like
+        :meth:`get_full`; blocking behavior and de-dup guarantee are
+        identical."""
+        M, L, i = self._dev_entry(relation, int(segment))
+        return (M, L) if i is None else (M[i], L[i])
+
+    def get_full_dev_batch(self, relation: str, segments: Sequence[int],
+                           pad_to: Optional[int] = None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Stacked full device blocks ``(M (S, R, deg), L (S, R))`` for
+        several segments, rows in the given order (optionally padded to
+        ``pad_to`` slots by repeating the first block — padding slots are
+        the caller's to ignore).
+
+        Blocking behavior, de-dup guarantee and counting are one
+        :meth:`get_full_dev` per segment, but blocks sharing a retained
+        launch are assembled with ONE device gather per launch (plus one
+        permutation take) instead of one slice per segment — the completion
+        gather path's pool builder."""
+        segments = [int(s) for s in segments]
+        ents = [self._dev_entry(relation, s) for s in segments]
+        S = len(ents)
+        pad_to = S if pad_to is None else max(pad_to, S)
+        # group segments by source device array (same retained launch)
+        groups: Dict[int, Tuple[jnp.ndarray, jnp.ndarray, list, list]] = {}
+        for out_pos, (M, L, i) in enumerate(ents):
+            if i is None:      # uploaded full block: make it a 1-batch group
+                M, L, i = M[None], L[None], 0
+            g = groups.setdefault(id(M), (M, L, [], []))
+            g[2].append(i)
+            g[3].append(out_pos)
+        parts_M, parts_L = [], []
+        perm = np.empty(pad_to, dtype=np.int32)
+        at = 0
+        for M, L, idx, outs in groups.values():
+            take = jnp.asarray(np.asarray(idx, dtype=np.int32))
+            parts_M.append(jnp.take(M, take, axis=0))
+            parts_L.append(jnp.take(L, take, axis=0))
+            perm[np.asarray(outs)] = at + np.arange(len(idx))
+            at += len(idx)
+        perm[S:] = perm[0]     # padding repeats the first block
+        pool_M = parts_M[0] if len(parts_M) == 1 else jnp.concatenate(parts_M)
+        pool_L = parts_L[0] if len(parts_L) == 1 else jnp.concatenate(parts_L)
+        if len(groups) > 1 or pad_to != S or np.any(perm[:S] != np.arange(S)):
+            ix = jnp.asarray(perm)
+            pool_M = jnp.take(pool_M, ix, axis=0)
+            pool_L = jnp.take(pool_L, ix, axis=0)
+        return pool_M, pool_L
+
+    def _dev_entry(self, relation: str, segment: int):
+        """Pooled device block entry ``(M, L, idx_or_None)`` for one
+        segment, producing/uploading on miss (shared by get_full_dev and
+        get_full_dev_batch; one request count per call)."""
+        self.stats.requests += 1
+        self._count(relation, segment)
+        key = (relation, segment)
+        ent = self._dev_pool.get(key)
+        if ent is None:
+            launch = self._inflight.get(key)
+            if launch is not None:
+                # integration fills the device pool for the whole launch
+                self._sync(launch)
+                ent = self._dev_pool.get(key)
+        if ent is None:
+            Mh, Lh = self._fetch(relation, segment, full=True)
+            # a cold miss dispatches a launch whose integration fills the
+            # device pool — re-check before paying a host->device upload
+            ent = self._dev_pool.get(key)
+            if ent is None:
+                ent = (jnp.asarray(Mh), jnp.asarray(Lh), None)
+                self._dev_pool.put(key, *ent)
+                self.stats.devpool_uploads += 1
+                return ent
+        self.stats.devpool_hits += 1
+        return ent
+
+    def dev_inverse(self, kind: str):
+        """Device inverse-map columns for simplex kind ``E``/``F``/``T``:
+        ``(inv_seg, inv_gid, inv_row, inv_key_or_None, n_global)``.
+        ``inv_key`` is only staged when the combined ``seg * n_global + gid``
+        key fits i32 (the ``jnp.searchsorted`` oracle); the split columns
+        always support the lexicographic binary search."""
+        if kind not in self._inv_nglob:
+            raise KeyError(f"no device inverse map for kind {kind!r}")
+        return (self._dev[f"inv_seg_{kind}"], self._dev[f"inv_gid_{kind}"],
+                self._dev[f"inv_row_{kind}"],
+                self._dev.get(f"inv_key_{kind}"), self._inv_nglob[kind])
 
     def get_batch(self, relation: str, segments: Sequence[int]):
         """Fetch several segments' (M, L) blocks as a list.
@@ -445,6 +623,18 @@ class RelationEngine:
         # stream, so reads of batch k would stall on batch k+1's launch.
         Mh = np.asarray(launch.M)
         Lh = np.asarray(launch.L)
+        # Preallocated-width contract (paper §4.6): L is the TRUE row count
+        # while M holds at most deg entries, so L > deg means the compaction
+        # silently dropped neighbours. Fail loudly with the fix.
+        worst = int(Lh.max()) if Lh.size else 0
+        deg = self.deg[launch.relation]
+        if worst > deg:
+            raise RelationWidthError(
+                f"relation {launch.relation!r} produced a row with {worst} "
+                f"entries but the preallocated width is "
+                f"deg[{launch.relation!r}]={deg}; the compacted M row would "
+                f"silently drop neighbours. Construct the engine with "
+                f"deg={{{launch.relation!r}: {worst}}} (or larger).")
         # Reverse order so the explicitly requested segments (batch front)
         # are most-recently-used and cannot be LRU-evicted by their own
         # lookahead when the cache is small.
@@ -452,6 +642,9 @@ class RelationEngine:
             self._inflight.pop((launch.relation, s), None)
             self.cache.put((launch.relation, s),
                            (Mh[i], Lh[i], launch.n_rows[i]))
+            # device pool: keep the still-device-resident rows addressable
+            # for get_full_dev (holds a reference to the launch arrays)
+            self._dev_pool.put((launch.relation, s), launch.M, launch.L, i)
         launch.done = True
         self.stats.evictions = self.cache.evictions
         self.stats.t_integrate += time.perf_counter() - t0
@@ -459,14 +652,20 @@ class RelationEngine:
     def _lookahead_segments(self, relation: str, batch: List[int]) -> List[int]:
         """Extend a drained batch with subsequent segments (paper §4.5:
         'the workload ... includes not only the currently requested segments
-        but also subsequent segments for proactive precomputation')."""
+        but also subsequent segments for proactive precomputation').
+
+        De-dups against the cache, the in-flight table AND the relation's
+        pending queue: a queued segment must not also enter a launch as
+        lookahead — it stays queued, so its eventual pop dispatches it once
+        instead of burning a ``_drain`` budget slot on a stale entry."""
         ns = self.smesh.n_segments
         out: List[int] = []
         seen = set(batch)
+        queued = set(self.queues[relation])
         for s in batch:
             for d in range(1, self.lookahead + 1):
                 n = s + d
-                if (n < ns and n not in seen
+                if (n < ns and n not in seen and n not in queued
                         and (relation, n) not in self.cache
                         and (relation, n) not in self._inflight):
                     seen.add(n)

@@ -14,6 +14,8 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..kernels import ops
+from .engine import EngineStats
 from .mesh import _EDGE_COMBOS, _FACE_COMBOS, edge_lookup, face_lookup
 from .segtables import Preconditioned
 
@@ -43,6 +45,12 @@ class ExplicitTriangulation:
         self.pre = pre
         self.smesh = pre.smesh
         self.rel: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+        # RelationEngine-compatible surface so the cross-segment completion
+        # pipeline (core/adjacency.py, host path) and its consumers accept
+        # the explicit baseline: stats / deg / the built relation set.
+        self.relations = tuple(relations)
+        self.stats = EngineStats()
+        self.deg = dict(ops.DEFAULT_DEG)
         t0 = time.perf_counter()
         for r in relations:
             self._build(r)
@@ -163,6 +171,10 @@ class ExplicitTriangulation:
             pass  # boundary relations answered directly below
         else:
             raise KeyError(r)
+        if r in self.rel:
+            # a global structure never truncates: widen the nominal relation
+            # width to the actually built one (completion gathers rely on it)
+            self.deg[r] = max(self.deg.get(r, 1), self.rel[r][0].shape[1])
 
     # -- query API (matches RelationEngine semantics) -------------------------
 
@@ -175,6 +187,66 @@ class ExplicitTriangulation:
 
     def get_batch(self, relation: str, segments):
         return [self.get(relation, s) for s in segments]
+
+    def get_full(self, relation: str, segment: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Full block of a segment. A global structure has no external rows
+        — every global row is already complete — so this is :meth:`get`;
+        the row indices are exactly what :meth:`local_rows` yields."""
+        return self.get(relation, segment)
+
+    def local_rows(self, kind: str, segs: np.ndarray,
+                   gids: np.ndarray) -> np.ndarray:
+        """``(segment, global id) -> block row`` for the explicit layout:
+        a simplex appears only in its owner segment's block (at
+        ``gid - interval[kind][segment]``); ``-1`` elsewhere. Rows are
+        already complete, so cross-segment completion consults exactly one
+        block per query and the union is the identity."""
+        iv = self.pre.interval(kind)
+        segs = np.asarray(segs, dtype=np.int64)
+        gids = np.asarray(gids, dtype=np.int64)
+        lo = iv[segs]
+        owned = (gids >= lo) & (gids < iv[segs + 1])
+        return np.where(owned, gids - lo, -1).astype(np.int32)
+
+    def prefetch(self, relation, segments) -> None:
+        pass  # everything is precomputed
+
+    def prefetch_many(self, requests) -> None:
+        pass
+
+    # boundary relations: same host-side lookups as the engine (paper §4.4)
+
+    def boundary_EV(self, edge_ids) -> np.ndarray:
+        return self.pre.E[np.asarray(edge_ids)]
+
+    def boundary_FV(self, face_ids) -> np.ndarray:
+        return self.pre.F[np.asarray(face_ids)]
+
+    def boundary_TV(self, tet_ids) -> np.ndarray:
+        return self.smesh.tets[np.asarray(tet_ids)]
+
+    def boundary_FE(self, face_ids) -> np.ndarray:
+        F = self.pre.F[np.asarray(face_ids)]
+        nv = self.smesh.n_vertices
+        e0 = edge_lookup(self.pre.E_keys, nv, F[:, 0], F[:, 1])
+        e1 = edge_lookup(self.pre.E_keys, nv, F[:, 0], F[:, 2])
+        e2 = edge_lookup(self.pre.E_keys, nv, F[:, 1], F[:, 2])
+        return np.stack([e0, e1, e2], axis=1)
+
+    def boundary_TE(self, tet_ids) -> np.ndarray:
+        T = self.smesh.tets[np.asarray(tet_ids)]
+        nv = self.smesh.n_vertices
+        cols = [edge_lookup(self.pre.E_keys, nv, T[:, a], T[:, b])
+                for a, b in _EDGE_COMBOS]
+        return np.stack(cols, axis=1)
+
+    def boundary_TF(self, tet_ids) -> np.ndarray:
+        T = self.smesh.tets[np.asarray(tet_ids)]
+        nv = self.smesh.n_vertices
+        cols = [face_lookup(self.pre.F_keys, nv, T[:, a], T[:, b], T[:, c])
+                for a, b, c in _FACE_COMBOS]
+        return np.stack(cols, axis=1)
 
     def rows(self, relation: str, ids: np.ndarray):
         M, L = self.rel[relation]

@@ -27,7 +27,9 @@ from .segment_relations import (
 
 # Maximum relation-list width (the paper's preallocated relation-array width).
 # Generous bounds for Freudenthal-style and irregular tet meshes; the engine
-# asserts no overflow at runtime.
+# enforces no overflow at runtime: RelationEngine._integrate raises
+# RelationWidthError (naming the deg= override) whenever a produced row's
+# true count L exceeds this width, instead of silently truncating M.
 DEFAULT_DEG = {
     "VV": 32, "VE": 32, "VF": 96, "VT": 64,
     "EF": 16, "ET": 16, "FT": 4, "TT": 8, "EE": 64, "FF": 48,
@@ -166,3 +168,34 @@ def relation_block(
                         block_x=block_x, block_y=block_y)
         mask = predicate(C, k, exact, exclude_diag=False)
     return compact(mask, col_global.astype(jnp.int32), deg)
+
+
+def completion_gather(
+    pool_M: jnp.ndarray,
+    pool_L: jnp.ndarray,
+    inv_seg: jnp.ndarray,
+    inv_gid: jnp.ndarray,
+    inv_row: jnp.ndarray,
+    pair_slot: jnp.ndarray,
+    pair_seg: jnp.ndarray,
+    pair_gid: jnp.ndarray,
+    pair_at: jnp.ndarray,
+    deg_out: int,
+    backend: str = "xla",
+    inv_key: Optional[jnp.ndarray] = None,
+    n_global: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Device-side cross-segment completion gather (docs/DESIGN.md §5).
+
+    Resolves ``(segment, gid)`` pairs to block rows by batched binary search
+    over the engine's device inverse maps, gathers the rows from the stacked
+    block pool, and unions/dedups/compacts them into padded ``(M, L)`` — all
+    on the accelerator. Backend dispatch mirrors :func:`relation_block`:
+    ``"xla"`` is one fused jit (``jnp.searchsorted`` oracle); ``"pallas"`` /
+    ``"pallas_interpret"`` run the resolve+gather as a Pallas grid with the
+    union epilogue jitted. See ``kernels/completion_gather.py``."""
+    from .completion_gather import gather_union
+    return gather_union(pool_M, pool_L, inv_seg, inv_gid, inv_row,
+                        pair_slot, pair_seg, pair_gid, pair_at,
+                        deg_out=deg_out, backend=backend,
+                        inv_key=inv_key, n_global=n_global)

@@ -47,15 +47,53 @@ def test_completed_adjacency_matches_global(setup, relation):
 
 @pytest.mark.parametrize("relation", ["EE", "FF", "TT"])
 def test_batched_bit_identical_to_scalar(setup, relation):
-    """The vectorized pipeline reproduces the scalar reference bit-for-bit
-    on a multi-segment mesh, for any chunking."""
+    """Both execute arms (host numpy union and device gather) reproduce the
+    scalar reference bit-for-bit on a multi-segment mesh, for any
+    chunking."""
     sm, pre, eng, _ = setup
     ids = _ids(sm, pre, relation, n=90)
     Ms, Ls = complete_adjacency_scalar(eng, relation, ids)
-    Mb, Lb = complete_adjacency(eng, relation, ids)
+    Mb, Lb = complete_adjacency(eng, relation, ids, path="host")
     assert np.array_equal(Ms, Mb) and np.array_equal(Ls, Lb)
+    Md, Ld = complete_adjacency(eng, relation, ids, path="device")
+    assert np.array_equal(Ms, Md) and np.array_equal(Ls, Ld)
     Mc, Lc = complete_adjacency(eng, relation, ids, batch=17)
     assert np.array_equal(Ms, Mc) and np.array_equal(Ls, Lc)
+
+
+@pytest.mark.parametrize("relation", ["EE", "FF", "TT"])
+def test_explicit_baseline_completion_equivalence(setup, relation):
+    """Regression: the explicit baseline used to crash with AttributeError
+    in complete_adjacency (no get_full/local_rows). Its global rows are
+    already complete, so engine-completed rows must equal them."""
+    sm, pre, eng, ex = setup
+    ids = _ids(sm, pre, relation, n=70)
+    Mx, Lx = complete_adjacency(ex, relation, ids)           # host path
+    Me, Le = ex.rows(relation, ids)
+    Mg, Lg = complete_adjacency(eng, relation, ids)          # engine path
+    assert np.array_equal(Lx, Le)
+    assert np.array_equal(Lg, Lx)
+    for i in range(len(ids)):
+        row = set(Mx[i][: Lx[i]])
+        assert row == set(Me[i][: Le[i]])
+        assert row == set(Mg[i][: Lg[i]])
+
+
+def test_critical_points_boundary_on_explicit(setup):
+    """critical_points(flag_boundary=True) used to crash on the explicit
+    baseline; it must now run and agree with the engine."""
+    from repro.algorithms.critical_points import critical_points, total_order
+    from repro.core.explicit import ExplicitTriangulation
+
+    sm, pre, eng4, _ = setup
+    rank = total_order(sm.scalars)
+    eng = RelationEngine(pre, ["VV", "VT", "TT"], cache_segments=4096)
+    ex = ExplicitTriangulation(pre, ["VV", "VT", "TT"])
+    t_e, c_e = critical_points(eng, pre, rank, flag_boundary=True)
+    t_x, c_x = critical_points(ex, pre, rank, flag_boundary=True)
+    assert np.array_equal(t_e, t_x)
+    assert c_e == c_x
+    assert "boundary_critical" in c_e
 
 
 @pytest.mark.parametrize("relation", ["EE", "FF", "TT"])

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.algorithms import fields
-from repro.core.engine import RelationEngine
+from repro.core.engine import RelationEngine, RelationWidthError
 from repro.core.explicit import (ActopoDS, ExplicitTriangulation,
                                  TopoClusterDS)
 from repro.core.mesh import segment_mesh
@@ -111,6 +111,39 @@ def test_no_relation_overflow(setup):
         for k in range(0, sm.n_segments, 7):
             M, L = eng.get(R, k)
             assert L.max(initial=0) <= M.shape[1], (R, k)
+
+
+def test_relation_overflow_raises(setup):
+    """Regression: a row wider than the preallocated deg[relation] used to
+    be silently truncated by the top_k compaction into a wrong neighbor
+    list; the engine must raise, naming the deg= override."""
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV"], deg={"VV": 2})
+    with pytest.raises(RelationWidthError, match=r"deg\['VV'\]=2"):
+        eng.get("VV", 0)
+    # the error names the override that fixes it
+    eng_wide = RelationEngine(pre, ["VV"], deg={"VV": 64})
+    M, L = eng_wide.get("VV", 0)
+    assert L.max() <= M.shape[1]
+
+
+def test_lookahead_skips_queued_segments(setup):
+    """Regression: lookahead must de-dup against the pending queue — a
+    queued segment stays queued (one eventual dispatch) instead of also
+    entering a launch as lookahead and leaving a stale queue entry."""
+    sm, pre = setup
+    eng = RelationEngine(pre, ["VV"], lookahead=8, batch_max=32,
+                         cache_segments=4096)
+    eng.request("VV", [5])
+    assert 5 not in eng._lookahead_segments("VV", [3])
+    assert 6 in eng._lookahead_segments("VV", [3])  # others still looked at
+    # end-to-end: mixed request/prefetch/get traffic never produces a
+    # (relation, segment) block twice (big cache -> produced == distinct)
+    eng.prefetch("VV", [0])
+    eng.get("VV", 2)
+    for s in range(sm.n_segments):
+        eng.get("VV", s)
+    assert eng.stats.segments_produced == len(eng.cache)
 
 
 def test_async_bit_identical_to_blocking_and_explicit(setup):
