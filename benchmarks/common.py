@@ -33,15 +33,21 @@ def prepare(dataset: str, relations, capacity: int = 64, seed: int = 0):
 
 
 def make_ds(kind: str, pre, relations, **kw):
-    """Factory for the three compared data structures (paper §5.2)."""
-    if kind == "gale":
+    """Factory for the three compared data structures (paper §5.2).
+
+    ``gale_host`` is the same engine as ``gale``; the benchmark drives it
+    through the host consumer arm (the PR-3 path) for the device-vs-host
+    A/B, so both arms see identical producer configuration."""
+    if kind in ("gale", "gale_host"):
         return RelationEngine(pre, relations, backend="xla",
                               lookahead=kw.get("lookahead", 8),
                               batch_max=kw.get("batch_max", 64),
                               cache_segments=kw.get("cache_segments", 1024),
                               block_x=kw.get("block_x", 256),
                               block_y=kw.get("block_y", 256),
-                              async_dispatch=kw.get("async_dispatch", True))
+                              async_dispatch=kw.get("async_dispatch", True),
+                              dev_pool_segments=kw.get(
+                                  "dev_pool_segments", 4096))
     if kind == "actopo":
         return ActopoDS(pre, relations,
                         lookahead=kw.get("lookahead", 8),
@@ -63,7 +69,10 @@ def ds_memory_bytes(ds) -> int:
     cache = 0
     for (M, L, n) in eng.cache._store.values():
         cache += int(np.prod(M.shape)) * 4 + int(np.prod(L.shape)) * 4
-    return tables + cache
+    # device block pool: still-resident launch arrays pinned for consumers
+    pool = sum(int(np.prod(M.shape)) * 4 + int(np.prod(L.shape)) * 4
+               for (M, L, _) in eng._dev_pool._arrays.values())
+    return tables + cache + pool
 
 
 def peak_rss_mb() -> float:

@@ -3,6 +3,13 @@
 dry-run artifacts when present).
 
   PYTHONPATH=src python -m benchmarks.run [--full]
+
+The ``algorithms`` suite additionally writes a machine-readable
+``BENCH_algorithms.json`` (per-algo, per-structure ``t_algo``/``t_sync``,
+device-pool counters, memory; ``$BENCH_ALGORITHMS_JSON`` overrides the
+path) so the perf trajectory is tracked across PRs — CI uploads it as an
+artifact. ``--datasets a,b`` restricts that suite's dataset pool (the CI
+smoke job runs one small dataset through all structures).
 """
 
 from __future__ import annotations
@@ -23,6 +30,9 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: algorithms,scalability,waiting,"
                          "kernel_params,memory_scaling,adjacency")
+    ap.add_argument("--datasets", default="",
+                    help="comma list restricting the algorithms suite's "
+                         "dataset pool (e.g. --datasets engine)")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -43,7 +53,10 @@ def main() -> None:
     for name, mod in suites.items():
         if only and name not in only:
             continue
-        for row in mod.run(quick=quick):
+        kw = {}
+        if name == "algorithms" and args.datasets:
+            kw["datasets"] = tuple(args.datasets.split(","))
+        for row in mod.run(quick=quick, **kw):
             print(row, flush=True)
 
     # roofline summary from dry-run artifacts (if the sweep has run)

@@ -1,6 +1,11 @@
 """Full TDA pipeline (the paper's three algorithms) on one dataset, with a
 GALE vs Explicit-Triangulation comparison — results must be identical.
 
+Both structures run the device-resident consumer pipeline
+(docs/DESIGN.md §6): the drivers read relation blocks as ConsumerBatch
+device arrays (`get_full_dev_many`) and the GALE engine serves every read
+from its device block pool — the stats line shows zero host block reads.
+
   PYTHONPATH=src python examples/analyze_mesh.py [dataset]
 """
 
@@ -17,7 +22,7 @@ from repro.core.mesh import segment_mesh
 from repro.core.segtables import precondition
 from repro.data.meshgen import load_dataset
 
-RELS = ["VV", "VE", "VF", "VT", "FT"]
+RELS = ["VV", "VE", "VF", "VT", "FT", "TT"]
 
 
 def main():
@@ -30,16 +35,27 @@ def main():
     print(f"{name}: v={sm.n_vertices} e={pre.n_edges} f={pre.n_faces} "
           f"t={sm.n_tets}  chi={chi}")
 
-    for label, ds in (("GALE", RelationEngine(pre, RELS, lookahead=8)),
-                      ("Explicit", ExplicitTriangulation(pre, RELS))):
+    for label, ds in (
+            ("GALE", RelationEngine(pre, RELS, lookahead=8,
+                                    dev_pool_segments=4096)),
+            ("Explicit", ExplicitTriangulation(pre, RELS))):
         t0 = time.perf_counter()
         _, cp = critical_points(ds, pre, rank, batch_segments=16)
-        g = discrete_gradient(ds, pre, rank, batch_segments=16)
+        # co-prefetch the TT queue: completion kernels for the Morse-Smale
+        # step execute behind the lower-star sweep (DESIGN.md §6)
+        g = discrete_gradient(ds, pre, rank, batch_segments=16,
+                              co_prefetch=("TT",))
         ms = morse_smale(ds, pre, g)
         dt = time.perf_counter() - t0
         assert g.euler() == chi, "Morse-Euler identity violated!"
+        s = ds.stats
         print(f"[{label:9s}] {dt:6.2f}s  critical={cp}  "
               f"gradient={g.counts()}  ms={ms.counts()}")
+        print(f"            consumer: {s.requests} block reads = "
+              f"{s.devpool_hits} device-pool hits + "
+              f"{s.devpool_uploads} uploads "
+              f"(host reads: {s.requests - s.devpool_hits - s.devpool_uploads})"
+              f"  t_sync={s.t_sync:.3f}s")
 
 
 if __name__ == "__main__":

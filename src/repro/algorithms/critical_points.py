@@ -25,12 +25,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.adjacency import complete_adjacency
+from ..core.mesh import _FACE_COMBOS
+from ..kernels import ops
+from . import consume
 
 # type codes
 REGULAR, MINIMUM, SADDLE1, SADDLE2, MAXIMUM, DEGENERATE = -1, 0, 1, 2, 3, 4
 
 
-def boundary_vertices(ds, pre, batch: int = 4096) -> np.ndarray:
+@jax.jit
+def _boundary_mask(M: jnp.ndarray,      # (nt, deg) completed TT, -1 pad
+                   T: jnp.ndarray,      # (nt, 4) global TV
+                   nv_one_hot: jnp.ndarray,  # (nv+1,) zeros — scatter target
+                   ) -> jnp.ndarray:
+    """Device boundary-vertex mask from completed TT: a face of tet ``t`` is
+    interior iff some TT neighbour contains all three of its vertices (a tet
+    containing a face's vertex triple shares that face); vertices of the
+    remaining faces are boundary. Same faces/vertices as the host arm's
+    ``boundary_TF`` id matching — bit-identical mask."""
+    nbT = jnp.where(M[..., None] >= 0, T[jnp.maximum(M, 0)], -1)  # (nt,deg,4)
+    faces = jnp.stack([T[:, list(c)] for c in _FACE_COMBOS], axis=1)
+    # (nt, 4 faces, 3 verts) vs neighbour vertex sets
+    shared = (faces[:, :, :, None, None] == nbT[:, None, None, :, :]).any(-1)
+    interior = shared.all(2).any(-1)                              # (nt, 4)
+    bvert = jnp.where(~interior[:, :, None], faces, -1)
+    nv = nv_one_hot.shape[0] - 1
+    ids = jnp.where(bvert >= 0, bvert, nv).reshape(-1)
+    return nv_one_hot.at[ids].set(True)[:nv]
+
+
+def boundary_vertices(ds, pre, batch: int = 4096,
+                      consumer: str = "auto") -> np.ndarray:
     """Boolean mask of mesh-boundary vertices, via completed TT.
 
     A tet has one completed-TT neighbour per *interior* face, so a tet with
@@ -41,9 +66,23 @@ def boundary_vertices(ds, pre, batch: int = 4096) -> np.ndarray:
 
     Requires a data structure with engine-native completion (a
     ``RelationEngine`` whose relation set includes TT); TT rows are requested
-    in pipelined batches like every other relation."""
+    in pipelined batches like every other relation. The device consumer arm
+    (docs/DESIGN.md §6) keeps the completed rows on the accelerator and
+    derives the mask in one fused jit; the host arm is the numpy reference.
+    Both arms are bit-identical."""
     sm = pre.smesh
     mask = np.zeros(sm.n_vertices, dtype=bool)
+    if sm.n_tets == 0:
+        return mask
+    # the device arm also needs the device completion path (a block pool);
+    # the explicit baseline has the batch API but completes through host
+    if (consume.consumer_mode(ds, consumer) == "device"
+            and hasattr(ds, "get_full_dev")):
+        M, _ = complete_adjacency(ds, "TT", np.arange(sm.n_tets),
+                                  batch=batch, path="device", out="dev")
+        zeros = jnp.zeros(sm.n_vertices + 1, dtype=bool)
+        return np.asarray(_boundary_mask(
+            M, jnp.asarray(sm.tets.astype(np.int32)), zeros))
     M, L = complete_adjacency(ds, "TT", np.arange(sm.n_tets), batch=batch)
     cand = np.nonzero(L < 4)[0]            # tets with >= 1 boundary face
     if len(cand) == 0:
@@ -148,6 +187,7 @@ def critical_points(
     batch_segments: int = 8,
     lookahead_hint: bool = True,
     flag_boundary: bool = False,
+    consumer: str = "auto",
 ) -> Tuple[np.ndarray, Dict[str, int]]:
     """Run the algorithm over all segments through data structure ``ds``.
 
@@ -156,15 +196,24 @@ def critical_points(
     producer precomputes ahead via the engine's lookahead) and classifies the
     batch on-device.
 
+    ``consumer`` selects the consumer arm (docs/DESIGN.md §6): ``"device"``
+    feeds :func:`_classify_batch` straight from the engine's device block
+    pool (one :meth:`get_full_dev_many` batch per step — zero host block
+    reads, columns trimmed to the exact per-mesh degree bounds), ``"host"``
+    is the PR-3 numpy-assembly path, and ``"auto"`` picks "device" whenever
+    ``ds`` exposes the batch API. Results are bit-identical either way.
+
     With ``flag_boundary=True`` (requires a data structure with TT
     completion, see :func:`boundary_vertices`) the counts gain a
     ``boundary_critical`` entry: non-regular vertices lying on the domain
     boundary, where the interior link classification is only approximate."""
     sm = pre.smesh
     ns = sm.n_segments
+    mode = consume.consumer_mode(ds, consumer)
     tets_dev = jnp.asarray(sm.tets.astype(np.int32))
     rank_dev = jnp.asarray(rank)
     types = np.empty(sm.n_vertices, dtype=np.int32)
+    cols = consume.degree_cols(pre, ("VV", "VT")) if mode == "device" else None
 
     def _prefetch_batch(b0):
         """Dispatch the producer for batch [b0, b0+batch) without blocking."""
@@ -179,13 +228,28 @@ def critical_points(
             for R in ("VV", "VT"):
                 ds.prefetch(R, nxt)
 
+    pending = []        # device arm: (gid, n_rows, device types) per batch
     _prefetch_batch(0)  # prime the pipeline before the first consume
     for b0 in range(0, ns, batch_segments):
         segs = list(range(b0, min(b0 + batch_segments, ns)))
         # issue batch k+1 to the producer BEFORE consuming batch k, so its
-        # kernels execute behind the classification below (engine-level
-        # analogue of core/pipeline.py's fused produce/consume scan)
+        # kernels execute behind the classification below (double-buffering
+        # through the engine's in-flight futures table)
         _prefetch_batch(b0 + batch_segments)
+        if mode == "device":
+            # device-resident arm: blocks go pool -> fused classify jit with
+            # no host copy; batch k's types download only after batch k+1
+            # is dispatched (depth-1 double buffer), hiding the host edge
+            # behind device compute without retaining O(mesh) device arrays
+            cb = ds.get_full_dev_many(("VV", "VT"), segs, cols=cols)
+            t = _classify_batch(cb.M["VV"], cb.M["VT"], cb.gid_dev,
+                                tets_dev, rank_dev,
+                                deg_v=cb.width("VV"), deg_t=cb.width("VT"))
+            if pending:
+                gid_p, n_p, t_p = pending.pop()
+                types[gid_p] = np.asarray(t_p)[:n_p]
+            pending.append((cb.gid, cb.n_rows, t))
+            continue
         vv = ds.get_batch("VV", segs) if hasattr(ds, "get_batch") else [
             ds.get("VV", s) for s in segs]
         vt = ds.get_batch("VT", segs) if hasattr(ds, "get_batch") else [
@@ -194,9 +258,10 @@ def critical_points(
         deg_t = -32 * (-max(M.shape[1] for M, _ in vt) // 32)
 
         rows = sum(M.shape[0] for M, _ in vv)
-        vvM = np.full((rows, deg_v), -1, dtype=np.int32)
-        vtM = np.full((rows, deg_t), -1, dtype=np.int32)
-        gid = np.empty(rows, dtype=np.int32)
+        rows_pad = ops.bucket_rows(rows)   # stable jit shapes on ragged tails
+        vvM = np.full((rows_pad, deg_v), -1, dtype=np.int32)
+        vtM = np.full((rows_pad, deg_t), -1, dtype=np.int32)
+        gid = np.full(rows_pad, -1, dtype=np.int32)
         at = 0
         for s, (Mv, _), (Mt, _) in zip(segs, vv, vt):
             n = Mv.shape[0]
@@ -207,7 +272,9 @@ def critical_points(
         t = _classify_batch(jnp.asarray(vvM), jnp.asarray(vtM),
                             jnp.asarray(gid), tets_dev, rank_dev,
                             deg_v=deg_v, deg_t=deg_t)
-        types[gid] = np.asarray(t)
+        types[gid[:rows]] = np.asarray(t)[:rows]
+    for gid, n, t in pending:   # drain the double buffer (last batch)
+        types[gid] = np.asarray(t)[:n]
 
     counts = {
         "minima": int((types == MINIMUM).sum()),
@@ -218,6 +285,6 @@ def critical_points(
         "regular": int((types == REGULAR).sum()),
     }
     if flag_boundary:
-        on_bd = boundary_vertices(ds, pre)
+        on_bd = boundary_vertices(ds, pre, consumer=consumer)
         counts["boundary_critical"] = int((on_bd & (types != REGULAR)).sum())
     return types, counts

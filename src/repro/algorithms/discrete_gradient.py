@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.adjacency import complete_adjacency
+from ..kernels import ops
+from . import consume
 
 _BIG = np.iinfo(np.int32).max
 
@@ -254,12 +256,85 @@ def audit_gradient(ds, pre, grad: GradientField,
     return out
 
 
+def _scatter_batch(g: GradientField, gid, veM, vfM, vtM,
+                   crit_vx, min_e, has_edge, pair, crit,
+                   de: int, df: int, dt: int) -> None:
+    """Integrate one classified batch into the global gradient field (host
+    numpy — the pipeline's final-assembly edge, shared bit-identically by
+    the device and host consumer arms). All inputs are host arrays already
+    sliced to the batch's real rows."""
+    g.crit_v[gid] = crit_vx
+    # v -> min edge arrows
+    e_gid = np.take_along_axis(veM, min_e[:, None], 1)[:, 0]
+    sel = has_edge
+    g.pair_v2e[gid[sel]] = e_gid[sel]
+    g.pair_e2v[e_gid[sel]] = gid[sel]
+    # slot-level pairs/criticals
+    slot_gid = np.concatenate([veM, vfM, vtM], axis=1)  # (B, N)
+    crit_e_rows = crit[:, :de] & (veM >= 0)
+    crit_f_rows = crit[:, de:de + df] & (vfM >= 0)
+    crit_t_rows = crit[:, de + df:] & (vtM >= 0)
+    g.crit_e[veM[crit_e_rows]] = True
+    g.crit_f[vfM[crit_f_rows]] = True
+    g.crit_t[vtM[crit_t_rows]] = True
+    # face->edge pairs live in slots [de, de+df); a face slot's pair
+    # value >= de means it was paired as the *facet of a tet* (recorded
+    # via the tet side below), so only values < de are edge pairings.
+    fslots = pair[:, de:de + df]
+    selF = (fslots >= 0) & (fslots < de) & (vfM >= 0)
+    if selF.any():
+        rowsF, colsF = np.nonzero(selF)
+        e_of = slot_gid[rowsF, fslots[rowsF, colsF]]
+        f_of = vfM[rowsF, colsF]
+        g.pair_e2f[e_of] = f_of
+        g.pair_f2e[f_of] = e_of
+    tslots = pair[:, de + df:]
+    selT = (tslots >= 0) & (vtM >= 0)
+    if selT.any():
+        rowsT, colsT = np.nonzero(selT)
+        f_of = slot_gid[rowsT, tslots[rowsT, colsT]]
+        t_of = vtM[rowsT, colsT]
+        g.pair_f2t[f_of] = t_of
+        g.pair_t2f[t_of] = f_of
+
+
+def _scatter_device_batch(g: GradientField, cb, degs, out) -> None:
+    """Download one device batch's results and integrate them (the device
+    arm's host edge); releasing ``cb`` afterwards frees its device
+    buffers, so at most one batch is retained at a time."""
+    de, df, dt = degs
+    crit_vx, min_e, has_edge, pair, crit, _ = out
+    n = cb.n_rows
+    _scatter_batch(
+        g, cb.gid,
+        np.asarray(cb.M["VE"])[:n], np.asarray(cb.M["VF"])[:n],
+        np.asarray(cb.M["VT"])[:n],
+        np.asarray(crit_vx)[:n], np.asarray(min_e)[:n],
+        np.asarray(has_edge)[:n], np.asarray(pair)[:n],
+        np.asarray(crit)[:n], de, df, dt)
+
+
 def discrete_gradient(
     ds, pre, rank: np.ndarray, batch_segments: int = 8,
-    audit: bool = False,
+    audit: bool = False, consumer: str = "auto",
+    co_prefetch: Tuple[str, ...] = (),
 ) -> GradientField:
     """Drive the lower-star batches through the data structure (GALE queues
     VE/VF/VT — the paper's 3-queue configuration for this algorithm).
+
+    ``consumer`` selects the consumer arm (docs/DESIGN.md §6): ``"device"``
+    feeds :func:`_lower_star_batch` straight from the engine's device block
+    pool via :meth:`get_full_dev_many` (zero host block reads, columns at
+    the exact per-mesh degree bounds), ``"host"`` is the PR-3
+    numpy-assembly path, ``"auto"`` picks "device" whenever ``ds`` exposes
+    the batch API. Bit-identical either way.
+
+    ``co_prefetch`` names extra engine relations to dispatch alongside each
+    batch's VE/VF/VT prefetch (the paper's multi-queue proactive
+    precompute): a driver that will consume e.g. completed TT right after
+    the gradient (``morse_smale``) passes ``("TT",)`` so those kernels
+    execute behind the lower-star state machines instead of serializing
+    after them. Relations the data structure does not serve are ignored.
 
     With ``audit=True`` (requires engine-native TT/FF completion, see
     :func:`audit_gradient`) the finished field is checked for cross-segment
@@ -267,10 +342,13 @@ def discrete_gradient(
     sm = pre.smesh
     nv, nt = sm.n_vertices, sm.n_tets
     ne, nf = pre.n_edges, pre.n_faces
+    mode = consume.consumer_mode(ds, consumer)
     E_dev = jnp.asarray(pre.E.astype(np.int32))
     F_dev = jnp.asarray(pre.F.astype(np.int32))
     T_dev = jnp.asarray(sm.tets.astype(np.int32))
     rank_dev = jnp.asarray(rank)
+    rels = ("VE", "VF", "VT")
+    cols = consume.degree_cols(pre, rels) if mode == "device" else None
 
     g = GradientField(
         pair_v2e=np.full(nv, -1, np.int64), pair_e2f=np.full(ne, -1, np.int64),
@@ -280,19 +358,23 @@ def discrete_gradient(
         crit_f=np.zeros(nf, bool), crit_t=np.zeros(nt, bool))
 
     ns = sm.n_segments
+    pending = []   # device arm: per-batch device results, assembled at end
+    extra = tuple(r for r in co_prefetch
+                  if r in getattr(ds, "relations", co_prefetch))
 
     def _prefetch_batch(b0):
         """Dispatch VE/VF/VT production for the next batch without blocking
-        (three kernels in flight round-robin — the paper's 3-queue config)."""
+        (three kernels in flight round-robin — the paper's 3-queue config),
+        plus any co_prefetch relations a later consumer will need."""
         if not hasattr(ds, "prefetch"):
             return
         nxt = list(range(b0, min(b0 + batch_segments, ns)))
         if not nxt:
             return
         if hasattr(ds, "prefetch_many"):
-            ds.prefetch_many({R: nxt for R in ("VE", "VF", "VT")})
+            ds.prefetch_many({R: nxt for R in rels + extra})
         else:
-            for R in ("VE", "VF", "VT"):
+            for R in rels + extra:
                 ds.prefetch(R, nxt)
 
     _prefetch_batch(0)  # prime the pipeline before the first consume
@@ -301,12 +383,28 @@ def discrete_gradient(
         # batch k+1 dispatched before batch k is consumed: the lower-star
         # state machines below overlap the next batch's relation kernels
         _prefetch_batch(b0 + batch_segments)
-        blocks = {R: ds.get_batch(R, segs) for R in ("VE", "VF", "VT")}
+        if mode == "device":
+            # device-resident arm: blocks go pool -> fused lower-star jit;
+            # batch k's downloads/scatter happen only after batch k+1 is
+            # dispatched (depth-1 double buffer), so the host edge hides
+            # behind device compute without retaining O(mesh) device arrays
+            cb = ds.get_full_dev_many(rels, segs, cols=cols)
+            de, df, dt = (cb.width(R) for R in rels)
+            out = _lower_star_batch(
+                cb.M["VE"], cb.M["VF"], cb.M["VT"], cb.gid_dev,
+                E_dev, F_dev, T_dev, rank_dev, de=de, df=df, dt=dt)
+            if pending:
+                _scatter_device_batch(g, *pending.pop())
+            pending.append((cb, (de, df, dt), out))
+            continue
+        blocks = {R: ds.get_batch(R, segs) for R in rels}
         degs = {R: -32 * (-max(M.shape[1] for M, _ in blocks[R]) // 32)
                 for R in blocks}
         rows = sum(M.shape[0] for M, _ in blocks["VE"])
-        stacked = {R: np.full((rows, degs[R]), -1, np.int32) for R in blocks}
-        gid = np.empty(rows, dtype=np.int32)
+        rows_pad = ops.bucket_rows(rows)  # stable jit shapes on ragged tails
+        stacked = {R: np.full((rows_pad, degs[R]), -1, np.int32)
+                   for R in blocks}
+        gid = np.full(rows_pad, -1, dtype=np.int32)
         at = 0
         for i, s in enumerate(segs):
             n = blocks["VE"][i][0].shape[0]
@@ -323,43 +421,14 @@ def discrete_gradient(
             de=degs["VE"], df=degs["VF"], dt=degs["VT"])
 
         de, df, dt = degs["VE"], degs["VF"], degs["VT"]
-        crit_vx, min_e, has_edge = map(np.asarray, (crit_vx, min_e, has_edge))
-        pair, crit = np.asarray(pair), np.asarray(crit)
-        veM, vfM, vtM = (stacked["VE"], stacked["VF"], stacked["VT"])
-
-        g.crit_v[gid] = crit_vx
-        # v -> min edge arrows
-        e_gid = np.take_along_axis(veM, min_e[:, None], 1)[:, 0]
-        sel = has_edge
-        g.pair_v2e[gid[sel]] = e_gid[sel]
-        g.pair_e2v[e_gid[sel]] = gid[sel]
-        # slot-level pairs/criticals
-        slot_gid = np.concatenate([veM, vfM, vtM], axis=1)  # (B, N)
-        crit_e_rows = crit[:, :de] & (veM >= 0)
-        crit_f_rows = crit[:, de:de + df] & (vfM >= 0)
-        crit_t_rows = crit[:, de + df:] & (vtM >= 0)
-        g.crit_e[veM[crit_e_rows]] = True
-        g.crit_f[vfM[crit_f_rows]] = True
-        g.crit_t[vtM[crit_t_rows]] = True
-        # face->edge pairs live in slots [de, de+df); a face slot's pair
-        # value >= de means it was paired as the *facet of a tet* (recorded
-        # via the tet side below), so only values < de are edge pairings.
-        fslots = pair[:, de:de + df]
-        selF = (fslots >= 0) & (fslots < de) & (vfM >= 0)
-        if selF.any():
-            rowsF, colsF = np.nonzero(selF)
-            e_of = slot_gid[rowsF, fslots[rowsF, colsF]]
-            f_of = vfM[rowsF, colsF]
-            g.pair_e2f[e_of] = f_of
-            g.pair_f2e[f_of] = e_of
-        tslots = pair[:, de + df:]
-        selT = (tslots >= 0) & (vtM >= 0)
-        if selT.any():
-            rowsT, colsT = np.nonzero(selT)
-            f_of = slot_gid[rowsT, tslots[rowsT, colsT]]
-            t_of = vtM[rowsT, colsT]
-            g.pair_f2t[f_of] = t_of
-            g.pair_t2f[t_of] = f_of
+        _scatter_batch(
+            g, gid[:rows],
+            stacked["VE"][:rows], stacked["VF"][:rows], stacked["VT"][:rows],
+            np.asarray(crit_vx)[:rows], np.asarray(min_e)[:rows],
+            np.asarray(has_edge)[:rows], np.asarray(pair)[:rows],
+            np.asarray(crit)[:rows], de, df, dt)
+    for item in pending:   # drain the double buffer (last batch)
+        _scatter_device_batch(g, *item)
     if audit:
         report = audit_gradient(ds, pre, g)
         if any(report.values()):

@@ -34,13 +34,14 @@ array:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.adjacency import complete_adjacency
+from . import consume
 from .discrete_gradient import GradientField
 
 
@@ -105,15 +106,28 @@ def _gather_ft(ds, pre, batch_segments: int = 16) -> np.ndarray:
     return ft
 
 
-def _cofacet_rows(ds, pre, face_ids, batch_segments: int = 16) -> np.ndarray:
+def _cofacet_rows(ds, pre, face_ids, batch_segments: int = 16,
+                  mode: str = "host") -> np.ndarray:
     """FT rows (m, 2) for specific faces only: one batched engine request per
-    set of owner segments instead of a whole-mesh gather."""
+    set of owner segments instead of a whole-mesh gather. The device arm
+    reads the owner blocks through :meth:`get_full_dev_many` and downloads
+    only the selected ``(m, 2)`` rows."""
     face_ids = np.asarray(face_ids, dtype=np.int64)
     out = np.full((len(face_ids), 2), -1, dtype=np.int64)
     if len(face_ids) == 0:
         return out
     segs = pre.owner_segment("F", face_ids)
     uniq = [int(s) for s in np.unique(segs)]
+    if mode == "device":
+        cb = ds.get_full_dev_many(("FT",), uniq, cols={"FT": 2})
+        # batch rows are ascending internal gids of the (sorted) owner
+        # segments, so each face resolves by one binary search
+        pos = np.searchsorted(cb.gid, face_ids)
+        rows = np.asarray(jnp.take(cb.M["FT"],
+                                   jnp.asarray(pos.astype(np.int32)), axis=0))
+        w = min(2, rows.shape[1])
+        out[:, :w] = rows[:, :w]
+        return out
     if hasattr(ds, "prefetch"):
         ds.prefetch("FT", uniq)
     for s, (M, L) in zip(uniq, ds.get_batch("FT", uniq)):
@@ -124,17 +138,51 @@ def _cofacet_rows(ds, pre, face_ids, batch_segments: int = 16) -> np.ndarray:
     return out
 
 
+@jax.jit
+def _across_successors(M: jnp.ndarray,   # (p, deg) completed TT, -1 pad
+                       f: jnp.ndarray,   # (p,) paired face gid per tet
+                       F: jnp.ndarray,   # (nf, 3) global FV
+                       T: jnp.ndarray,   # (nt, 4) global TV
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused successor assembly on device: the TT neighbour across the
+    paired face is the one containing all three of the face's vertices (a
+    tet contains a face's vertex triple iff that face is on its boundary) —
+    the same predicate the host arm resolves through ``boundary_TF`` face
+    ids, with the same first-match tie-break."""
+    fv = F[jnp.maximum(f, 0)]                                    # (p, 3)
+    nbT = jnp.where(M[..., None] >= 0, T[jnp.maximum(M, 0)], -1)  # (p,deg,4)
+    across = (fv[:, None, :, None] == nbT[:, :, None, :]).any(-1).all(-1)
+    has = across.any(-1)
+    nxt = M[jnp.arange(M.shape[0]), jnp.argmax(across, -1)]
+    return nxt, has
+
+
 def _ascending_successors_tt(ds, pre, grad: GradientField,
-                             batch: int) -> np.ndarray:
+                             batch: int, mode: str = "host") -> np.ndarray:
     """Tet -> tet-across-its-paired-face successor via completed TT: the
     unique cross-segment TT neighbour whose boundary contains the paired
-    face. Bit-identical to the FT-gather successor."""
+    face. Bit-identical to the FT-gather successor.
+
+    The device consumer arm (docs/DESIGN.md §6) takes the completed rows as
+    device arrays (``complete_adjacency(..., out="dev")`` — no host block
+    round trip) and assembles successors in one fused jit; the host arm is
+    the numpy reference."""
     nt = pre.smesh.n_tets
     succ = np.arange(nt)
     paired = np.nonzero(grad.pair_t2f >= 0)[0]
     if len(paired) == 0:
         return succ
     f = grad.pair_t2f[paired]
+    if mode == "device" and hasattr(ds, "get_full_dev"):
+        M_dev, _ = complete_adjacency(ds, "TT", paired, batch=batch,
+                                      path="device", out="dev")
+        nxt, has = _across_successors(
+            M_dev, jnp.asarray(f.astype(np.int32)),
+            jnp.asarray(pre.F.astype(np.int32)),
+            jnp.asarray(pre.smesh.tets.astype(np.int32)))
+        nxt, has = np.asarray(nxt), np.asarray(has)
+        succ[paired[has]] = nxt[has]
+        return succ
     M, _ = complete_adjacency(ds, "TT", paired, batch=batch)
     p, deg = M.shape
     tf_nb = ds.boundary_TF(np.maximum(M, 0).reshape(-1)).reshape(p, deg, 4)
@@ -148,16 +196,21 @@ def _ascending_successors_tt(ds, pre, grad: GradientField,
 
 def morse_smale(ds, pre, grad: GradientField,
                 batch_segments: int = 16,
-                adjacency: str = "auto") -> MSComplex:
+                adjacency: str = "auto",
+                consumer: str = "auto") -> MSComplex:
     """Extract the MS 1-skeleton + segmentation.
 
     ``adjacency`` selects how ascending successors are assembled: ``"tt"``
     forces the completed-TT path, ``"ft"`` the whole-mesh FT gather, and
     ``"auto"`` (default) uses TT when ``ds`` supports engine-native
-    completion for TT and FT. Results are bit-identical either way."""
+    completion for TT and FT. ``consumer`` selects the consumer arm
+    (docs/DESIGN.md §6): the device arm keeps completed TT rows and the
+    targeted FT reads on the accelerator and assembles successors in fused
+    jits. Results are bit-identical across all combinations."""
     sm = pre.smesh
     nv, nt = sm.n_vertices, sm.n_tets
     E = pre.E
+    mode = consume.consumer_mode(ds, consumer)
     use_tt = adjacency == "tt" or (
         adjacency == "auto" and _supports_completion(ds, "TT", "FT"))
 
@@ -176,8 +229,9 @@ def morse_smale(ds, pre, grad: GradientField,
         # completed TT gives the tet across each paired face directly;
         # only the critical faces' FT rows are fetched (targeted segments)
         succ_t = _ascending_successors_tt(ds, pre, grad,
-                                          batch=64 * batch_segments)
-        cof_s2 = _cofacet_rows(ds, pre, s2, batch_segments)
+                                          batch=64 * batch_segments,
+                                          mode=mode)
+        cof_s2 = _cofacet_rows(ds, pre, s2, batch_segments, mode=mode)
     else:
         ft = _gather_ft(ds, pre, batch_segments)
         f = grad.pair_t2f                  # (nt,) face this tet is paired to

@@ -201,12 +201,11 @@ def execute_completion(eng: RelationEngine, plan: CompletionPlan
 # Max (query, segment) pairs per query = number of boundary (k-1)-faces.
 _PAIR_WIDTH = {"E": 2, "F": 3, "T": 4}
 
-
-def _pow2(n: int) -> int:
-    return 1 << max(int(n) - 1, 0).bit_length()
+_pow2 = ops.bucket_rows
 
 
-def execute_completion_device(eng: RelationEngine, plan: CompletionPlan
+def execute_completion_device(eng: RelationEngine, plan: CompletionPlan,
+                              out: str = "host"
                               ) -> Tuple[np.ndarray, np.ndarray]:
     """Device-side gather + union of the planned rows (the GALE path).
 
@@ -218,6 +217,11 @@ def execute_completion_device(eng: RelationEngine, plan: CompletionPlan
     (``kernels/completion_gather.py``, backend per ``eng.backend``). One
     host round trip per batch; bit-identical to :func:`execute_completion`.
 
+    With ``out="dev"`` the completed rows STAY on the accelerator: the
+    return value is device ``(M (n, deg) i32, L (n,) i32)`` arrays for a
+    device-resident consumer (docs/DESIGN.md §6) and the batch pays no host
+    round trip at all (the overflow check reduces ``L`` to one scalar).
+
     Raises :class:`RelationWidthError` if a completed row would overflow
     ``deg[relation]`` (the preallocated relation-array width)."""
     if not hasattr(eng, "get_full_dev"):
@@ -228,6 +232,10 @@ def execute_completion_device(eng: RelationEngine, plan: CompletionPlan
     n = len(plan.ids)
     P = len(plan.pair_seg)
     if P == 0:
+        if out == "dev":   # width stays deg so chunked device concat lines up
+            return (jnp.full((n, eng.deg[plan.relation]), -1,
+                             dtype=jnp.int32),
+                    jnp.zeros(n, dtype=jnp.int32))
         return (np.full((n, 1), -1, dtype=np.int64),
                 np.zeros(n, dtype=np.int32))
     relation = plan.relation
@@ -267,6 +275,18 @@ def execute_completion_device(eng: RelationEngine, plan: CompletionPlan
         jnp.asarray(pair_gid), jnp.asarray(pair_at),
         deg_out=deg, backend=eng.backend, inv_key=inv_key, n_global=n_glob)
 
+    eng.stats.completion_raw_neighbors += int(raw)
+    eng.stats.completion_neighbors += int(kept)
+    if out == "dev":
+        # device-resident consumers take the padded (n, deg) rows as-is;
+        # the overflow check costs one scalar reduce, not a block download
+        worst = int(jnp.max(L_dev[:n])) if n else 0
+        if worst > deg:
+            raise RelationWidthError(
+                f"completed {relation!r} row has {worst} neighbours but the "
+                f"preallocated width is deg[{relation!r}]={deg}; construct "
+                f"the engine with deg={{{relation!r}: {worst}}} (or larger).")
+        return M_dev[:n], L_dev[:n]
     Mh = np.asarray(M_dev)[:n]          # the batch's ONE host round trip
     Lh = np.asarray(L_dev)[:n]
     worst = int(Lh.max()) if n else 0
@@ -278,14 +298,13 @@ def execute_completion_device(eng: RelationEngine, plan: CompletionPlan
     width = max(worst, 1)
     M = Mh[:, :width].astype(np.int64)
     L = Lh.astype(np.int32)
-    eng.stats.completion_raw_neighbors += int(raw)
-    eng.stats.completion_neighbors += int(kept)
     return M, L
 
 
 def complete_adjacency(
     eng: RelationEngine, relation: str, ids: Sequence[int],
     batch: Optional[int] = None, path: Optional[str] = None,
+    out: str = "host",
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Complete EE/FF/TT rows for global simplex ids. Returns padded (M, L).
 
@@ -297,6 +316,12 @@ def complete_adjacency(
     would only pay XLA dispatch overhead, so the host arm stays the
     default there. Both arms are bit-identical.
 
+    ``out="dev"`` (device execute arm only) keeps the completed rows on the
+    accelerator: device ``(M (n, deg[relation]) i32, L (n,) i32)`` arrays
+    for device-resident consumers (docs/DESIGN.md §6) — rows stay at the
+    full preallocated width instead of being trimmed to the realized
+    maximum, and no host round trip happens.
+
     With ``batch=k`` the query list is processed in pipelined chunks: chunk
     i+1 is planned (and its blocks prefetched) *before* chunk i is executed,
     so relation production overlaps the gather/union work — the same
@@ -304,11 +329,18 @@ def complete_adjacency(
     The result is bit-identical for any ``batch``."""
     if path is None:
         path = ("device" if hasattr(eng, "get_full_dev")
-                and jax.default_backend() != "cpu" else "host")
+                and (out == "dev" or jax.default_backend() != "cpu")
+                else "host")
     if path not in ("host", "device"):
         raise ValueError(f"path must be 'host' or 'device', got {path!r}")
-    execute = (execute_completion_device if path == "device"
-               else execute_completion)
+    if out == "dev" and path != "device":
+        raise ValueError("out='dev' needs the device execute arm "
+                         f"(got path={path!r})")
+    if path == "device":
+        def execute(e, p):
+            return execute_completion_device(e, p, out=out)
+    else:
+        execute = execute_completion
     ids = np.asarray(ids, dtype=np.int64).reshape(-1)
     if batch is None or batch <= 0 or batch >= len(ids):
         return execute(eng, plan_completion(eng, relation, ids))
@@ -320,6 +352,10 @@ def complete_adjacency(
         if i + 1 < len(chunks):   # plan + prefetch ahead of the execute
             plans.append(plan_completion(eng, relation, chunks[i + 1]))
         outs.append(execute(eng, plans[i]))
+    if out == "dev":
+        # chunk widths are all deg[relation]: one device concat, no host copy
+        return (jnp.concatenate([Mc for Mc, _ in outs]),
+                jnp.concatenate([Lc for _, Lc in outs]))
     width = max(max(M.shape[1] for M, _ in outs), 1)
     M = np.full((len(ids), width), -1, dtype=np.int64)
     L = np.concatenate([Lc for _, Lc in outs])

@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -209,6 +210,51 @@ class _DevBlockPool:
 
     def __len__(self):
         return len(self._entries)
+
+
+@dataclasses.dataclass
+class ConsumerBatch:
+    """Device-resident view of one consumer batch (docs/DESIGN.md §6): the
+    *internal* relation rows of a batch of segments, stacked across several
+    relations that share a subject simplex kind, served straight from the
+    producer's device block pool.
+
+    Rows are the segments' internal simplices in traversal order (segment by
+    segment, ascending global id within each — exactly the layout the host
+    consumers used to assemble in numpy), padded to a power-of-two row
+    bucket (``ops.bucket_rows``) so the consumer jits see O(log n) shapes.
+    Padding rows carry ``gid == -1`` and all-(-1) relation entries; their
+    classification results are the caller's to discard.
+
+    ``M``/``L`` are fused-gather outputs — fresh device buffers, NOT
+    aliases of the pooled launch arrays — so they are safe jit inputs, but
+    they also live OUTSIDE the ``dev_pool_segments`` bound: consumers must
+    release each batch before materializing the next-plus-one (the drivers'
+    depth-1 double buffer), or device memory grows with the mesh
+    (docs/DESIGN.md §6)."""
+
+    kind: str                      # subject simplex kind (V/E/F/T)
+    segments: Tuple[int, ...]      # segment ids served, in row order
+    n_rows: int                    # real rows (before bucket padding)
+    gid: np.ndarray                # (n_rows,) host global ids for scatter
+    gid_dev: jnp.ndarray           # (rows_pad,) device gids, -1 padding
+    M: Dict[str, jnp.ndarray]      # relation -> (rows_pad, width) device
+    L: Dict[str, jnp.ndarray]      # relation -> (rows_pad,) device counts
+
+    def width(self, relation: str) -> int:
+        return self.M[relation].shape[1]
+
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def _gather_internal(pool_M, pool_L, flat, gid, w: int):
+    """One fused device gather per (relation, batch): pick the internal
+    rows (``flat`` indexes the flattened slot-rows), trim columns to the
+    static width ``w``, and mask bucket-padding rows (``gid == -1``) to the
+    documented all-(-1) / zero-count padding."""
+    Mr = jnp.take(pool_M.reshape(-1, pool_M.shape[-1]), flat, axis=0)[:, :w]
+    Lr = jnp.take(pool_L.reshape(-1), flat, axis=0)
+    return (jnp.where(gid[:, None] >= 0, Mr, -1),
+            jnp.where(gid >= 0, Lr, 0))
 
 
 class _Launch:
@@ -407,6 +453,14 @@ class RelationEngine:
         gather path's pool builder."""
         segments = [int(s) for s in segments]
         ents = [self._dev_entry(relation, s) for s in segments]
+        return self._stack_entries(ents, pad_to)
+
+    def _stack_entries(self, ents, pad_to: Optional[int]
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Stack resolved device-pool entries into ``(S, R, deg)`` /
+        ``(S, R)`` arrays (one device gather per retained launch plus one
+        permutation take) — shared by :meth:`get_full_dev_batch` and the
+        mixed-launch arm of :meth:`get_full_dev_many`."""
         S = len(ents)
         pad_to = S if pad_to is None else max(pad_to, S)
         # group segments by source device array (same retained launch)
@@ -461,6 +515,95 @@ class RelationEngine:
                 return ent
         self.stats.devpool_hits += 1
         return ent
+
+    def get_full_dev_many(self, relations: Sequence[str],
+                          segments: Sequence[int],
+                          cols: Optional[Dict[str, int]] = None
+                          ) -> ConsumerBatch:
+        """Multi-relation device-batch read: one :class:`ConsumerBatch`
+        serving the internal rows of ``segments`` across every relation in
+        ``relations`` (all sharing one subject simplex kind) straight from
+        the device block pool — the consumer pipeline's read primitive
+        (docs/DESIGN.md §6).
+
+        All misses are dispatched first through one round-robin
+        ``prefetch_many`` (de-dup as usual), then each relation's internal
+        rows are compacted into a single ``(rows_pad, width)`` device array
+        with ONE fused gather straight off the retained launch array (the
+        steady state; batches mixing several launches or uploaded blocks
+        fall back to the :meth:`get_full_dev_batch` stacking) — no host
+        copy of any block. ``cols`` optionally trims a relation's
+        columns to a caller-proven degree bound (entries past the true max
+        row count are all ``-1`` padding, so trimming is lossless); widths
+        and the power-of-two row bucket are static per mesh, so the
+        downstream consumer jits compile once.
+
+        Blocking behavior, de-dup guarantee and stats counting are one
+        :meth:`get_full_dev` per ``(relation, segment)``: every read is
+        served by the device pool (``devpool_hits``) or a counted one-time
+        upload (``devpool_uploads``) — never a host block read."""
+        relations = tuple(relations)
+        kind = relations[0][0]       # subject kind ("VV" subjects are V)
+        for r in relations:
+            if r[0] != kind:
+                raise ValueError(
+                    f"get_full_dev_many needs one subject kind per batch: "
+                    f"{relations} mixes {kind!r} and {r[0]!r}")
+        segments = [int(s) for s in segments]
+        self.prefetch_many({r: segments for r in relations})
+
+        n_int, _ = self.tables.counts(kind)
+        iv = self.pre.interval(kind)
+        ns_rows = [int(n_int[s]) for s in segments]
+        n_rows = sum(ns_rows)
+        rows_pad = ops.bucket_rows(n_rows)
+        # flat (segment-slot * R + row) gather indices for the internal rows
+        gid = np.empty(n_rows, dtype=np.int64)
+        flat = np.zeros(rows_pad, dtype=np.int32)
+        at = 0
+        for j, (s, n) in enumerate(zip(segments, ns_rows)):
+            gid[at:at + n] = np.arange(iv[s], iv[s] + n)
+            flat[at:at + n] = np.arange(n, dtype=np.int32)  # + j*R below
+            at += n
+        gid_pad = np.full(rows_pad, -1, dtype=np.int64)
+        gid_pad[:n_rows] = gid
+        gid_dev = jnp.asarray(gid_pad.astype(np.int32))
+
+        M: Dict[str, jnp.ndarray] = {}
+        L: Dict[str, jnp.ndarray] = {}
+        for r in relations:
+            # fast path: every segment's block lives in ONE retained launch
+            # (the common steady state) — a single fused gather straight off
+            # the launch array, no per-segment slicing or stacking
+            ents = [self._dev_entry(r, s) for s in segments]
+            aid = id(ents[0][0])
+            if (all(e[2] is not None for e in ents)
+                    and all(id(e[0]) == aid for e in ents)):
+                pool_M, pool_L = ents[0][0], ents[0][1]
+                R = pool_M.shape[1]
+                off = np.zeros(rows_pad, dtype=np.int32)
+                at = 0
+                for (_, _, i), n in zip(ents, ns_rows):
+                    off[at:at + n] = i * R
+                    at += n
+                flat_dev = jnp.asarray(flat + off)
+            else:        # mixed launches / uploads: generic stacked gather
+                pool_M, pool_L = self._stack_entries(ents, len(ents))
+                R = pool_M.shape[1]
+                off = np.zeros(rows_pad, dtype=np.int32)
+                at = 0
+                for j, n in enumerate(ns_rows):
+                    off[at:at + n] = j * R
+                    at += n
+                flat_dev = jnp.asarray(flat + off)
+            w = pool_M.shape[2]
+            if cols and r in cols:
+                w = min(w, max(int(cols[r]), 1))
+            M[r], L[r] = _gather_internal(pool_M, pool_L, flat_dev,
+                                          gid_dev, w)
+        return ConsumerBatch(kind=kind, segments=tuple(segments),
+                             n_rows=n_rows, gid=gid, gid_dev=gid_dev,
+                             M=M, L=L)
 
     def dev_inverse(self, kind: str):
         """Device inverse-map columns for simplex kind ``E``/``F``/``T``:
@@ -699,9 +842,7 @@ class RelationEngine:
             q.extend(s for s in look[room:] if s not in qs)
         # pad the launch to a power-of-two bucket (duplicating the last
         # segment) so jit sees O(log batch_max) shapes, not one per drain
-        b_pad = 1
-        while b_pad < len(batch):
-            b_pad *= 2
+        b_pad = ops.bucket_rows(len(batch))
         padded = batch + [batch[-1]] * (b_pad - len(batch))
         segs = jnp.asarray(np.asarray(padded, dtype=np.int32))
 

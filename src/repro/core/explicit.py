@@ -15,7 +15,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from ..kernels import ops
-from .engine import EngineStats
+from .engine import ConsumerBatch, EngineStats
 from .mesh import _EDGE_COMBOS, _FACE_COMBOS, edge_lookup, face_lookup
 from .segtables import Preconditioned
 
@@ -208,6 +208,47 @@ class ExplicitTriangulation:
         lo = iv[segs]
         owned = (gids >= lo) & (gids < iv[segs + 1])
         return np.where(owned, gids - lo, -1).astype(np.int32)
+
+    def get_full_dev_many(self, relations, segments, cols=None
+                          ) -> ConsumerBatch:
+        """Same device-batch consumer API as
+        :meth:`RelationEngine.get_full_dev_many`, so the device-resident
+        drivers A/B against the baseline apples-to-apples. A global
+        structure's rows are already the concatenated internal rows in
+        global-id order, so the batch is one contiguous slice per relation,
+        uploaded once per call (counted as ``devpool_uploads`` — the
+        explicit baseline has no producer launches to keep resident)."""
+        import jax.numpy as jnp
+
+        relations = tuple(relations)
+        kind = relations[0][0]       # subject kind ("VV" subjects are V)
+        segments = [int(s) for s in segments]
+        iv = self.pre.interval(kind)
+        parts = [np.arange(iv[s], iv[s + 1]) for s in segments]
+        gid = (np.concatenate(parts) if parts
+               else np.zeros(0, dtype=np.int64))
+        n_rows = len(gid)
+        rows_pad = ops.bucket_rows(n_rows)
+        gid_pad = np.full(rows_pad, -1, dtype=np.int64)
+        gid_pad[:n_rows] = gid
+        M, L = {}, {}
+        for r in relations:
+            Mg, Lg = self.rel[r]
+            w = Mg.shape[1]
+            if cols and r in cols:
+                w = min(w, max(int(cols[r]), 1))
+            Mp = np.full((rows_pad, w), -1, dtype=np.int32)
+            Lp = np.zeros(rows_pad, dtype=np.int32)
+            Mp[:n_rows] = Mg[gid, :w]
+            Lp[:n_rows] = np.minimum(Lg[gid], w)
+            M[r] = jnp.asarray(Mp)
+            L[r] = jnp.asarray(Lp)
+            self.stats.requests += len(segments)
+            self.stats.devpool_uploads += len(segments)
+        return ConsumerBatch(kind=kind, segments=tuple(segments),
+                             n_rows=n_rows, gid=gid,
+                             gid_dev=jnp.asarray(gid_pad.astype(np.int32)),
+                             M=M, L=L)
 
     def prefetch(self, relation, segments) -> None:
         pass  # everything is precomputed

@@ -6,8 +6,12 @@ Backends:
   - ``"pallas"``            : pl.pallas_call on a real TPU
   - ``"pallas_interpret"``  : same kernel executed in interpreter mode (CPU
                               correctness validation)
-  - ``"xla"``               : the pure-jnp oracle, jitted (fast path on CPU,
-                              used by the benchmarks in this container)
+  - ``"xla"``               : one fused jit per launch, specialized per
+                              relation with sparse entry assembly
+                              (docs/DESIGN.md §4) — bit-identical to the
+                              counts oracle and the Pallas kernels; the
+                              fast path on CPU, used by the benchmarks in
+                              this container
 """
 
 from __future__ import annotations
@@ -34,6 +38,16 @@ DEFAULT_DEG = {
     "VV": 32, "VE": 32, "VF": 96, "VT": 64,
     "EF": 16, "ET": 16, "FT": 4, "TT": 8, "EE": 64, "FF": 48,
 }
+
+def bucket_rows(n: int, floor: int = 1) -> int:
+    """Round a batch-sized leading dimension up to a power-of-two bucket.
+
+    Every jit whose input carries a batch-sized leading dim (kernel launch
+    batches, stacked consumer rows, completion pair lists) pads to this
+    bucket so ragged tails produce O(log n) distinct shapes instead of one
+    recompile per tail size. ``floor`` sets the minimum bucket."""
+    return 1 << max(int(max(n, floor, 1)) - 1, 0).bit_length()
+
 
 # (shared count k, exact match?) — see core.segtables.RELATION_PREDICATE.
 PREDICATE = {
@@ -123,19 +137,228 @@ def _compact_impl(mask, col_global, deg):
     return M, L
 
 
+_BIG = np.int32(np.iinfo(np.int32).max)
+
+
+def _invert_entries(row, order, val, valid, R: int, O: int, deg: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sparse relation assembly: turn per-batch entry lists into the padded
+    ``(M (B, R, deg), L (B, R))`` block — the xla backend's replacement for
+    the dense mask + top_k compaction (O(entries·log entries) instead of
+    O(R·N) — the launch epilogue used to dominate the producer).
+
+    ``row``/``order``/``val``/``valid``: (B, E) int32 entry columns — the
+    block row, the intra-row sort key (the old compaction's local column
+    index, so M rows keep the exact same ascending-local order), and the
+    global id to store. Entries sharing ``(row, order)`` are stored/counted
+    once (they always carry the same ``val``); ``L`` is the TRUE count, so
+    overflow past ``deg`` stays detectable by the engine's width check."""
+    B, E = row.shape
+    key = jnp.where(valid, row * O + order, _BIG)
+    key, val = jax.lax.sort((key, val), num_keys=1)
+    valid_s = key != _BIG
+    rows_s = jnp.where(valid_s, key // O, R)
+    ones = jnp.ones((B, 1), dtype=bool)
+    uniq = valid_s & jnp.concatenate(
+        [ones, key[:, 1:] != key[:, :-1]], axis=1)
+    first = jnp.concatenate(
+        [ones, rows_s[:, 1:] != rows_s[:, :-1]], axis=1)
+    cum = jnp.cumsum(uniq.astype(jnp.int32), axis=1)     # inclusive rank
+    # exclusive unique-rank at each row group's start, propagated across
+    # the group (ranks are nondecreasing, so cummax carries them forward)
+    excl = jax.lax.cummax(
+        jnp.where(first, cum - uniq.astype(jnp.int32), -1), axis=1)
+    pos = cum - 1 - excl
+    bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    r_idx = jnp.minimum(rows_s, R)
+    p_idx = jnp.where(valid_s & (pos < deg), pos, deg)
+    M = jnp.full((B, R + 1, deg + 1), -1, dtype=jnp.int32)
+    M = M.at[bidx, r_idx, p_idx].set(val)[:, :R, :deg]
+    L = jnp.zeros((B, R + 1), dtype=jnp.int32)
+    L = L.at[bidx, r_idx].add(uniq.astype(jnp.int32))[:, :R]
+    return M, L
+
+
+def _block_member_v(tabY, col_global, nvl: int, deg: int):
+    """VE/VF/VT block via entry inversion: local vertex ``v`` relates to
+    simplex ``y`` iff ``v ∈ verts(y)`` (the exact ``C == 1`` predicate — a
+    simplex lists distinct vertices), so the ``(B, NY, arity)`` table IS
+    the entry list."""
+    B, NY, a = tabY.shape
+    ok = tabY >= 0
+    yid = jnp.broadcast_to(
+        jnp.arange(NY, dtype=jnp.int32)[None, :, None], (B, NY, a))
+    val = jnp.broadcast_to(col_global[:, :, None], (B, NY, a))
+    return _invert_entries(
+        jnp.maximum(tabY, 0).reshape(B, -1), yid.reshape(B, -1),
+        val.reshape(B, -1).astype(jnp.int32), ok.reshape(B, -1),
+        R=nvl, O=NY, deg=deg)
+
+
+def _block_vv(T_local, col_global, nvl: int, deg: int):
+    """VV block via entry inversion: ``v ~ w`` iff some local tet contains
+    both (the ``C >= 1`` off-diagonal predicate). The 12 ordered vertex
+    pairs of each tet are the entries; a tet's vertices are distinct, so
+    the diagonal never appears, and repeated pairs from different tets
+    dedup inside :func:`_invert_entries`."""
+    B, NT, arity = T_local.shape
+    rows, orders, vals, valids = [], [], [], []
+    for a in range(arity):
+        for b in range(arity):
+            if a == b:
+                continue
+            va, vb = T_local[..., a], T_local[..., b]
+            ok = (va >= 0) & (vb >= 0)
+            rows.append(jnp.maximum(va, 0))
+            orders.append(jnp.maximum(vb, 0))
+            vals.append(jnp.take_along_axis(
+                col_global, jnp.maximum(vb, 0), axis=1))
+            valids.append(ok)
+    cat = lambda xs: jnp.concatenate(xs, axis=1)
+    return _invert_entries(cat(rows), cat(orders),
+                           cat(vals).astype(jnp.int32), cat(valids),
+                           R=nvl, O=nvl, deg=deg)
+
+
+_TET_FACES = ((0, 1, 2), (0, 1, 3), (0, 2, 3), (1, 2, 3))
+
+
+def _block_tt(T_local, col_global, nvl: int, deg: int):
+    """TT block via a sort join on canonical face keys: two distinct tets
+    relate iff they share exactly three vertices — a common face (the
+    exact ``C == 3`` predicate). Each local tet contributes its four sorted
+    vertex triples; after one lane-wise sort, equal adjacent keys are the
+    shared faces (a face has at most two cofacet tets), yielding both
+    directed entries."""
+    B, NT, _ = T_local.shape
+    w = jnp.sort(T_local, axis=-1)                    # ascending vertices
+    valid_t = (T_local >= 0).all(-1)                  # (B, NT)
+    keys = [((w[..., i] * nvl + w[..., j]) * nvl + w[..., k])
+            for i, j, k in _TET_FACES]
+    fkey = jnp.stack(keys, axis=-1).reshape(B, 4 * NT)
+    tid = jnp.broadcast_to(
+        jnp.arange(NT, dtype=jnp.int32)[None, :, None],
+        (B, NT, 4)).reshape(B, 4 * NT)
+    fkey = jnp.where(jnp.repeat(valid_t, 4, axis=1), fkey, _BIG)
+    fkey, tid = jax.lax.sort((fkey, tid), num_keys=1)
+    eq = (fkey[:, :-1] == fkey[:, 1:]) & (fkey[:, :-1] != _BIG)
+    t0, t1 = tid[:, :-1], tid[:, 1:]
+    row = jnp.concatenate([t0, t1], axis=1)
+    order = jnp.concatenate([t1, t0], axis=1)
+    valid = jnp.concatenate([eq, eq], axis=1)
+    val = jnp.take_along_axis(col_global, order, axis=1)
+    return _invert_entries(row, order, val.astype(jnp.int32), valid,
+                           R=NT, O=NT, deg=deg)
+
+
+def _block_sub_join(tabX, tabY, col_global, nvl: int, deg: int):
+    """EF/ET/FT block via a sort join: subject ``x`` relates to ``y`` iff
+    every vertex of ``x`` lies in ``y`` (the exact ``C == arity(x)``
+    predicate — x then is a boundary sub-simplex of y). X rows contribute
+    their canonical sorted vertex key once; each y contributes the keys of
+    all its arity(x)-vertex subsets. After one lane-wise sort (x entries
+    ordered before equal-key y entries), every y entry resolves its x row
+    from the latest x entry seen — local tables list every sub-simplex of
+    every local simplex, so the group is never orphaned, and a cross-group
+    mismatch is caught by re-checking the key."""
+    import itertools
+
+    B, NX, ax = tabX.shape
+    _, NY, ay = tabY.shape
+    wx = jnp.sort(tabX, axis=-1)
+    kx = wx[..., 0]
+    for i in range(1, ax):
+        kx = kx * nvl + wx[..., i]
+    kx = jnp.where((tabX >= 0).all(-1), kx * 2, _BIG)      # is_y = 0
+    wy = jnp.sort(tabY, axis=-1)
+    oky = (tabY >= 0).all(-1)
+    ykeys = []
+    for comb in itertools.combinations(range(ay), ax):
+        k = wy[..., comb[0]]
+        for c in comb[1:]:
+            k = k * nvl + wy[..., c]
+        ykeys.append(k)
+    nyk = len(ykeys)
+    ky = jnp.stack(ykeys, axis=-1).reshape(B, NY * nyk)
+    ky = jnp.where(jnp.repeat(oky, nyk, axis=1), ky * 2 + 1, _BIG)
+    yid = jnp.broadcast_to(
+        jnp.arange(NY, dtype=jnp.int32)[None, :, None],
+        (B, NY, nyk)).reshape(B, NY * nyk)
+
+    key = jnp.concatenate([kx, ky], axis=1)
+    payload = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(NX, dtype=jnp.int32)[None, :], (B, NX)),
+         yid], axis=1)
+    is_y = jnp.concatenate(
+        [jnp.zeros((B, NX), jnp.int32), jnp.ones((B, NY * nyk), jnp.int32)],
+        axis=1)
+    key, payload, is_y = jax.lax.sort((key, payload, is_y), num_keys=1)
+    iota = jnp.arange(key.shape[1], dtype=jnp.int32)[None, :]
+    lastX = jax.lax.cummax(jnp.where(is_y == 0, iota, -1), axis=1)
+    take = jnp.maximum(lastX, 0)
+    xkey = jnp.take_along_axis(key, take, axis=1)
+    ok = ((is_y == 1) & (lastX >= 0) & (key != _BIG)
+          & (xkey == key - 1))
+    row = jnp.take_along_axis(payload, take, axis=1)
+    val = jnp.take_along_axis(
+        col_global, jnp.where(ok, payload, 0), axis=1)
+    return _invert_entries(row, jnp.where(ok, payload, 0),
+                           val.astype(jnp.int32), ok,
+                           R=NX, O=NY, deg=deg)
+
+
+def _counts_pairwise(tabX: jnp.ndarray, tabY: jnp.ndarray) -> jnp.ndarray:
+    """Shared-vertex counts by direct slot comparison: C[b, x, y] = number
+    of ``tabX[b, x]`` vertices appearing in ``tabY[b, y]`` — the meet-mode
+    contract of ``ref.relation_counts_meet`` without the ``nvl``-wide
+    one-hot inner dimension (arity passes of ``(B, NX, NY, ay)``
+    comparisons instead of a ``(B, NX, nvl, NY)`` matmul)."""
+    C = jnp.zeros(tabX.shape[:2] + (tabY.shape[1],), dtype=jnp.int32)
+    for i in range(tabX.shape[2]):
+        xi = tabX[:, :, i]                                    # (B, NX)
+        m = (xi[:, :, None, None] == tabY[:, None, :, :]).any(-1)
+        m = m & (xi >= 0)[:, :, None]
+        C = C + m.astype(jnp.int32)
+    return C
+
+
 @functools.partial(jax.jit, static_argnames=("relation", "nvl", "deg"))
 def _relation_block_fused(relation, tabX, tabY, col_global, nvl, deg):
-    """counts -> predicate -> compaction fused into ONE jitted computation,
-    so the engine pays a single dispatch per launch and the whole epilogue
-    is one in-flight future (async producer contract, see core/engine.py)."""
+    """counts/entries -> (M, L) fused into ONE jitted computation, so the
+    engine pays a single dispatch per launch and the whole epilogue is one
+    in-flight future (async producer contract, see core/engine.py).
+
+    Per-relation specialization (xla backend only; the Pallas backends keep
+    the MXU one-hot counts kernels): the driver hot-path relations
+    (VV/VE/VF/VT/TT) are assembled sparsely by entry inversion / sort join
+    — O(table entries) instead of the O(rows·cols) dense mask + top_k
+    compaction — and the remaining relations count shared vertices by
+    direct slot comparison. All arms are algebraically identical to the
+    one-hot counts + predicate + compaction, hence bit-identical (M, L)."""
+    colg = col_global.astype(jnp.int32)
+    if relation == "VV" and nvl * nvl + nvl < 2 ** 31:
+        return _block_vv(tabX, colg, nvl, deg)
+    if relation in ("VE", "VF", "VT"):
+        NY = tabY.shape[1]
+        if nvl * NY + NY < 2 ** 31:
+            return _block_member_v(tabY, colg, nvl, deg)
+    if relation == "TT":
+        NT = tabX.shape[1]
+        if nvl ** 3 < 2 ** 31 and NT * NT + NT < 2 ** 31:
+            return _block_tt(tabX, colg, nvl, deg)
+    if relation in ("EF", "ET", "FT"):
+        NX, NY = tabX.shape[1], tabY.shape[1]
+        ax = tabX.shape[2]
+        if nvl ** ax * 2 < 2 ** 31 and NX * NY + NY < 2 ** 31:
+            return _block_sub_join(tabX, tabY, colg, nvl, deg)
     k, exact = PREDICATE[relation]
     if relation == "VV":
         C = ref.relation_counts_vv(tabX, nvl)
         mask = _predicate_impl(C, k, exact, exclude_diag=True)
     else:
-        C = ref.relation_counts_meet(tabX, tabY, nvl)
+        C = _counts_pairwise(tabX, tabY)
         mask = _predicate_impl(C, k, exact, exclude_diag=False)
-    return _compact_impl(mask, col_global.astype(jnp.int32), deg)
+    return _compact_impl(mask, colg, deg)
 
 
 def relation_block(

@@ -1,0 +1,163 @@
+"""Device-resident consumer pipeline (docs/DESIGN.md §6): the engine's
+multi-relation device-batch read API, the drivers' device-vs-host consumer
+arms, boundary_vertices edge cases, and the EngineStats surface."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.algorithms import fields
+from repro.algorithms.critical_points import (
+    boundary_vertices,
+    critical_points,
+    total_order,
+)
+from repro.algorithms.discrete_gradient import discrete_gradient
+from repro.algorithms.morse_smale import morse_smale
+from repro.core.engine import EngineStats, RelationEngine
+from repro.core.explicit import ExplicitTriangulation
+from repro.core.mesh import TetMesh, segment_mesh
+from repro.core.segtables import precondition
+from repro.data.meshgen import structured_grid
+from repro.kernels import ops
+
+RELS = ["VV", "VE", "VF", "VT", "FT", "TT"]
+
+
+def _prep(mesh, capacity=24, relations=RELS):
+    sm = segment_mesh(mesh, capacity=capacity)
+    pre = precondition(sm, relations=relations)
+    rank = total_order(sm.scalars)
+    return sm, pre, rank
+
+
+@pytest.fixture(scope="module")
+def grid():
+    mesh = structured_grid(
+        7, 7, 6, jitter=0.2, seed=11,
+        scalar_fn=fields.gaussians(3, k=4, sigma=3.0, scale=7))
+    return _prep(mesh)
+
+
+def test_bucket_rows():
+    assert [ops.bucket_rows(n) for n in (0, 1, 2, 3, 8, 9, 1000)] == [
+        1, 1, 2, 4, 8, 16, 1024]
+    assert ops.bucket_rows(3, floor=16) == 16
+
+
+def test_get_full_dev_many_matches_host_blocks(grid):
+    sm, pre, rank = grid
+    eng = RelationEngine(pre, RELS)
+    segs = list(range(min(5, sm.n_segments)))
+    cb = eng.get_full_dev_many(("VV", "VT"), segs)
+    assert eng.stats.requests == (eng.stats.devpool_hits
+                                  + eng.stats.devpool_uploads)
+    at = 0
+    for s in segs:
+        M, L = eng.get("VV", s)
+        n = M.shape[0]
+        assert np.array_equal(
+            np.asarray(cb.M["VV"])[at:at + n, :M.shape[1]], M)
+        assert np.array_equal(np.asarray(cb.L["VV"])[at:at + n], L)
+        assert np.array_equal(cb.gid[at:at + n],
+                              np.arange(sm.I_V[s], sm.I_V[s] + n))
+        at += n
+    assert at == cb.n_rows
+    # bucket padding rows carry the documented inert values
+    assert (np.asarray(cb.M["VV"])[cb.n_rows:] == -1).all()
+    assert (np.asarray(cb.L["VV"])[cb.n_rows:] == 0).all()
+    assert (np.asarray(cb.gid_dev)[cb.n_rows:] == -1).all()
+    # column trim to a caller-proven bound is lossless
+    w = int(max(np.asarray(cb.L["VV"]).max(), 1))
+    cb2 = eng.get_full_dev_many(("VV",), segs, cols={"VV": w})
+    assert cb2.width("VV") == w
+    assert np.array_equal(np.asarray(cb2.M["VV"]),
+                          np.asarray(cb.M["VV"])[:, :w])
+
+
+def test_drivers_device_host_bit_identical(grid):
+    sm, pre, rank = grid
+    eng_d = RelationEngine(pre, RELS, cache_segments=4096)
+    eng_h = RelationEngine(pre, RELS, cache_segments=4096)
+    t_d, c_d = critical_points(eng_d, pre, rank, consumer="device",
+                               flag_boundary=True)
+    t_h, c_h = critical_points(eng_h, pre, rank, consumer="host",
+                               flag_boundary=True)
+    assert np.array_equal(t_d, t_h) and c_d == c_h
+    g_d = discrete_gradient(eng_d, pre, rank, consumer="device",
+                            co_prefetch=("TT",))
+    g_h = discrete_gradient(eng_h, pre, rank, consumer="host")
+    for f in ("pair_v2e", "pair_e2f", "pair_f2t", "pair_e2v", "pair_f2e",
+              "pair_t2f", "crit_v", "crit_e", "crit_f", "crit_t"):
+        assert np.array_equal(getattr(g_d, f), getattr(g_h, f)), f
+    ms_d = morse_smale(eng_d, pre, g_d, consumer="device")
+    ms_h = morse_smale(eng_h, pre, g_h, consumer="host")
+    for a in ("dest_min", "dest_max", "saddle1_ends", "saddle2_ends"):
+        assert np.array_equal(getattr(ms_d, a), getattr(ms_h, a)), a
+    # the device arm's hot loop never read a block through the host: every
+    # read was a device-pool hit or a counted one-time upload
+    assert eng_d.stats.requests == (eng_d.stats.devpool_hits
+                                    + eng_d.stats.devpool_uploads)
+    assert eng_d.stats.requests > 0
+    # the explicit baseline serves the same batch API (auto -> device)
+    ex = ExplicitTriangulation(pre, RELS)
+    t_e, c_e = critical_points(ex, pre, rank, flag_boundary=True)
+    assert c_e == c_d
+    g_e = discrete_gradient(ex, pre, rank)
+    ms_e = morse_smale(ex, pre, g_e)
+    assert np.array_equal(ms_e.dest_min, ms_d.dest_min)
+    assert ms_e.counts() == ms_d.counts()
+
+
+def test_explicit_consumer_auto_is_device(grid):
+    sm, pre, rank = grid
+    ex = ExplicitTriangulation(pre, RELS)
+    critical_points(ex, pre, rank)
+    assert ex.stats.requests == ex.stats.devpool_uploads > 0
+
+
+def test_boundary_vertices_closed_mesh():
+    """The boundary of a 4-simplex is a closed 3-manifold (every face has
+    exactly two cofacet tets): no vertex is a boundary vertex."""
+    tets = np.array([[0, 1, 2, 3], [0, 1, 2, 4], [0, 1, 3, 4],
+                     [0, 2, 3, 4], [1, 2, 3, 4]])
+    mesh = TetMesh(points=np.random.default_rng(0).normal(size=(5, 3))
+                   .astype(np.float32),
+                   tets=tets, scalars=np.arange(5, dtype=np.float32))
+    sm, pre, rank = _prep(mesh, capacity=8)
+    for consumer in ("device", "host"):
+        eng = RelationEngine(pre, RELS)
+        mask = boundary_vertices(eng, pre, consumer=consumer)
+        assert mask.shape == (5,) and not mask.any(), consumer
+
+
+def test_boundary_vertices_single_tet():
+    """A lone tet has four boundary faces: every vertex is on the boundary
+    (and its completed TT rows are empty)."""
+    mesh = TetMesh(points=np.eye(4, 3, dtype=np.float32),
+                   tets=np.array([[0, 1, 2, 3]]),
+                   scalars=np.arange(4, dtype=np.float32))
+    sm, pre, rank = _prep(mesh, capacity=8)
+    for consumer in ("device", "host"):
+        eng = RelationEngine(pre, RELS)
+        mask = boundary_vertices(eng, pre, consumer=consumer)
+        assert mask.all() and mask.shape == (4,), consumer
+
+
+def test_engine_stats_as_dict_round_trip():
+    stats = EngineStats(requests=7, cache_hits=3, cache_misses=4,
+                        devpool_hits=5, devpool_uploads=2,
+                        completion_queries=11, completion_fanout_blocks=6,
+                        completion_raw_neighbors=40, completion_neighbors=10,
+                        t_sync=0.25)
+    d = stats.as_dict()
+    # every dataclass field survives, plus the derived ratio
+    assert d["devpool_hits"] == 5 and d["devpool_uploads"] == 2
+    assert d["completion_dedup_ratio"] == 4.0
+    fields_ = {f.name for f in dataclasses.fields(EngineStats)}
+    assert fields_ <= set(d)
+    rebuilt = EngineStats(**{k: v for k, v in d.items() if k in fields_})
+    assert rebuilt == stats
+    assert rebuilt.as_dict() == d
+    assert EngineStats().completion_dedup_ratio == 0.0
