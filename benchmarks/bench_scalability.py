@@ -1,38 +1,134 @@
-"""Paper Tables 3/4: scalability with the number of consumers.
+"""Paper Tables 3/4 + Figs. 8/9 consumer-scalability axis: sweep the
+thread-parallel consumer scheduler's ``workers`` count (docs/DESIGN.md §8)
+across engine backends and structures.
 
-The CPU-thread count of the paper maps to the *consumer batch width*
-(segments classified per device dispatch) in our vectorized consumers;
-producer parallelism maps to the engine lookahead. We sweep width for GALE
-and ACTOPO on the largest dataset, mirroring the paper's Stent runs."""
+The paper's CPU-thread axis maps directly onto the drivers' ``workers=``
+argument (segment-batch stream partitioned across N consumer threads);
+producer parallelism stays the engine lookahead. Every sweep carries
+**bit-identical verification rows**: the full result arrays of each
+``workers > 1`` run are hashed against the ``workers = 1`` baseline of the
+same (algo, structure, backend), and engine runs additionally assert
+``produced_eq`` — the exact same number of produced segments as the serial
+run, i.e. zero duplicate production under concurrency.
+
+Machine-readable output: ``run()`` writes ``BENCH_scalability.json``
+(override with ``$BENCH_SCALABILITY_JSON``) with one record per cell —
+workers, backend, ``t_algo``, ``t_sync``, produced counts, identical flag —
+mirroring the paper's scalability study as a tracked artifact.
+"""
 
 from __future__ import annotations
 
-from typing import List
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.algorithms.critical_points import critical_points
 from repro.algorithms.discrete_gradient import discrete_gradient
+from repro.algorithms.morse_smale import morse_smale
 
 from . import common
-from .bench_algorithms import CP_RELS, DG_RELS
+from .bench_algorithms import CP_RELS, DG_RELS, MS_RELS
 
-WIDTHS = (2, 4, 8, 16, 32)
+WORKERS = (1, 2, 4)
+
+
+def _digest(*arrays) -> str:
+    h = hashlib.sha1()
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+def _run(algo: str, ds, pre, rank, workers: int):
+    """One driver run; returns (signature, result) where the signature
+    hashes the FULL output arrays (bit-identity, not just counts)."""
+    if algo == "critical_points":
+        t, counts = critical_points(ds, pre, rank, batch_segments=8,
+                                    workers=workers)
+        return _digest(t), counts
+    if algo == "discrete_gradient":
+        g = discrete_gradient(ds, pre, rank, batch_segments=8,
+                              workers=workers)
+        return _digest(g.pair_v2e, g.pair_e2f, g.pair_f2t, g.crit_v,
+                       g.crit_e, g.crit_f, g.crit_t), g.counts()
+    if algo == "morse_smale":
+        g = discrete_gradient(ds, pre, rank, batch_segments=8,
+                              workers=workers, co_prefetch=("TT",))
+        ms = morse_smale(ds, pre, g, batch_segments=8, workers=workers)
+        return _digest(ms.dest_min, ms.dest_max, ms.saddle1_ends,
+                       ms.saddle2_ends), ms.counts()
+    raise KeyError(algo)
+
+
+def _make(structure: str, pre, rels, backend: str):
+    if structure == "gale":
+        return common.make_ds("gale", pre, rels, backend=backend,
+                              dev_pool_segments=4096)
+    return common.make_ds(structure, pre, rels)
 
 
 def run(quick: bool = True) -> List[str]:
     dataset = "fish" if quick else "stent"
-    rows = []
-    for algo, rels, fn in (
-            ("critical_points", CP_RELS, critical_points),
-            ("discrete_gradient", DG_RELS, discrete_gradient)):
+    backends = ("xla",) if quick else ("xla", "pallas_interpret")
+    algos = (("critical_points", CP_RELS),
+             ("discrete_gradient", DG_RELS)) if quick else (
+        ("critical_points", CP_RELS), ("discrete_gradient", DG_RELS),
+        ("morse_smale", MS_RELS))
+    rows: List[str] = []
+    records: List[Dict] = []
+    for algo, rels in algos:
         sm, pre, rank, t_pre = common.prepare(dataset, rels)
-        for kind in ("gale", "actopo"):
-            for w in WIDTHS if not quick else WIDTHS[1:4]:
-                ds = common.make_ds(kind, pre, rels, lookahead=w)
-                t, _ = common.timed(fn, ds, pre, rank, batch_segments=w)
-                st = ds.stats if hasattr(ds, "stats") else ds.engine.stats
-                rows.append(common.row(
-                    f"scalability/{algo}/{dataset}/{kind}/w{w}", t,
-                    f"algo_s={t:.3f};launches={st.kernel_launches};"
-                    f"produced={st.segments_produced};"
-                    f"mem_mb={common.ds_memory_bytes(ds) / 1e6:.1f}"))
+        cells = [("gale", b) for b in backends] + [
+            ("explicit", None), ("actopo", None)]
+        if quick:
+            cells = cells[:-1]     # actopo sweep only in --full
+        for structure, backend in cells:
+            base: Optional[Dict] = None
+            for w in WORKERS:
+                # warm run first so the sweep times pipelines, not compiles
+                for _ in range(2):
+                    ds = _make(structure, pre, rels, backend or "xla")
+                    t, (sig, counts) = common.timed(
+                        _run, algo, ds, pre, rank, w)
+                st = ds.stats if hasattr(ds, "stats") else None
+                produced = st.segments_produced if st else 0
+                rec = {
+                    "algo": algo, "dataset": dataset,
+                    "structure": structure, "backend": backend,
+                    "workers": w, "t_algo": t,
+                    "t_sync": st.t_sync if st else 0.0,
+                    "produced": produced, "signature": sig,
+                }
+                tag = (f"scalability/{algo}/{dataset}/{structure}"
+                       + (f"-{backend}" if backend else "") + f"/w{w}")
+                if base is None:
+                    base = rec
+                    rows.append(common.row(
+                        tag, t, f"algo_s={t:.3f};produced={produced};"
+                        f"baseline=True"))
+                    records.append(rec)
+                    continue
+                ident = sig == base["signature"]
+                prod_eq = (produced == base["produced"]) if st else None
+                speedup = base["t_algo"] / t if t > 0 else float("inf")
+                derived = (f"algo_s={t:.3f};speedup_vs_w1={speedup:.2f};"
+                           f"identical={ident}")
+                if prod_eq is not None:
+                    derived += f";produced_eq={prod_eq}"
+                rows.append(common.row(tag, t, derived))
+                rec.update({"identical": ident, "produced_eq": prod_eq,
+                            "speedup_vs_w1": speedup})
+                records.append(rec)
+
+    path = os.environ.get("BENCH_SCALABILITY_JSON", "BENCH_scalability.json")
+    with open(path, "w") as fh:
+        json.dump({"suite": "scalability", "quick": quick, "workers": WORKERS,
+                   "records": records}, fh, indent=1)
     return rows

@@ -39,7 +39,8 @@ def make_ds(kind: str, pre, relations, **kw):
     through the host consumer arm (the PR-3 path) for the device-vs-host
     A/B, so both arms see identical producer configuration."""
     if kind in ("gale", "gale_host"):
-        return RelationEngine(pre, relations, backend="xla",
+        return RelationEngine(pre, relations,
+                              backend=kw.get("backend", "xla"),
                               lookahead=kw.get("lookahead", 8),
                               batch_max=kw.get("batch_max", 64),
                               cache_segments=kw.get("cache_segments", 1024),

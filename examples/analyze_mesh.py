@@ -5,11 +5,13 @@ Both structures run the device-resident consumer pipeline
 (docs/DESIGN.md §6): the drivers read relation blocks as ConsumerBatch
 device arrays (`get_full_dev_many`) and the GALE engine serves every read
 from its device block pool — the stats line shows zero host block reads.
+``--workers N`` runs the drivers' consumer arms on N CPU threads through
+the scheduler (docs/DESIGN.md §8); results are bit-identical for any N.
 
-  PYTHONPATH=src python examples/analyze_mesh.py [dataset]
+  PYTHONPATH=src python examples/analyze_mesh.py [dataset] [--workers N]
 """
 
-import sys
+import argparse
 import time
 
 from repro.algorithms import fields
@@ -26,7 +28,12 @@ RELS = ["VV", "VE", "VF", "VT", "FT", "TT"]
 
 
 def main():
-    name = sys.argv[1] if len(sys.argv) > 1 else "foot"
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("dataset", nargs="?", default="foot")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="consumer threads per driver (DESIGN.md §8)")
+    args = ap.parse_args()
+    name, workers = args.dataset, args.workers
     mesh = load_dataset(name, scalar_fn=fields.gaussians(2, k=5, sigma=5.0))
     sm = segment_mesh(mesh, capacity=64)
     pre = precondition(sm, relations=RELS)
@@ -40,12 +47,13 @@ def main():
                                     dev_pool_segments=4096)),
             ("Explicit", ExplicitTriangulation(pre, RELS))):
         t0 = time.perf_counter()
-        _, cp = critical_points(ds, pre, rank, batch_segments=16)
+        _, cp = critical_points(ds, pre, rank, batch_segments=16,
+                                workers=workers)
         # co-prefetch the TT queue: completion kernels for the Morse-Smale
         # step execute behind the lower-star sweep (DESIGN.md §6)
         g = discrete_gradient(ds, pre, rank, batch_segments=16,
-                              co_prefetch=("TT",))
-        ms = morse_smale(ds, pre, g)
+                              co_prefetch=("TT",), workers=workers)
+        ms = morse_smale(ds, pre, g, workers=workers)
         dt = time.perf_counter() - t0
         assert g.euler() == chi, "Morse-Euler identity violated!"
         s = ds.stats

@@ -26,6 +26,7 @@ import numpy as np
 
 from ..core.adjacency import complete_adjacency
 from ..core.mesh import _FACE_COMBOS
+from ..core.scheduler import run_partitioned
 from ..kernels import ops
 from . import consume
 
@@ -55,7 +56,7 @@ def _boundary_mask(M: jnp.ndarray,      # (nt, deg) completed TT, -1 pad
 
 
 def boundary_vertices(ds, pre, batch: int = 4096,
-                      consumer: str = "auto") -> np.ndarray:
+                      consumer: str = "auto", workers: int = 1) -> np.ndarray:
     """Boolean mask of mesh-boundary vertices, via completed TT.
 
     A tet has one completed-TT neighbour per *interior* face, so a tet with
@@ -79,11 +80,13 @@ def boundary_vertices(ds, pre, batch: int = 4096,
     if (consume.consumer_mode(ds, consumer) == "device"
             and hasattr(ds, "get_full_dev")):
         M, _ = complete_adjacency(ds, "TT", np.arange(sm.n_tets),
-                                  batch=batch, path="device", out="dev")
+                                  batch=batch, path="device", out="dev",
+                                  workers=workers)
         zeros = jnp.zeros(sm.n_vertices + 1, dtype=bool)
         return np.asarray(_boundary_mask(
             M, jnp.asarray(sm.tets.astype(np.int32)), zeros))
-    M, L = complete_adjacency(ds, "TT", np.arange(sm.n_tets), batch=batch)
+    M, L = complete_adjacency(ds, "TT", np.arange(sm.n_tets), batch=batch,
+                              workers=workers)
     cand = np.nonzero(L < 4)[0]            # tets with >= 1 boundary face
     if len(cand) == 0:
         return mask
@@ -188,6 +191,7 @@ def critical_points(
     lookahead_hint: bool = True,
     flag_boundary: bool = False,
     consumer: str = "auto",
+    workers: int = 1,
 ) -> Tuple[np.ndarray, Dict[str, int]]:
     """Run the algorithm over all segments through data structure ``ds``.
 
@@ -203,6 +207,13 @@ def critical_points(
     is the PR-3 numpy-assembly path, and ``"auto"`` picks "device" whenever
     ``ds`` exposes the batch API. Results are bit-identical either way.
 
+    ``workers`` is the consumer-thread count (docs/DESIGN.md §8): the
+    segment-batch stream is partitioned across ``workers`` CPU threads by
+    the scheduler (``core/scheduler.py``), each running the selected
+    consumer arm with its own depth-1 double buffer; per-batch
+    classifications are reduced in segment order, so the result is
+    bit-identical for any worker count.
+
     With ``flag_boundary=True`` (requires a data structure with TT
     completion, see :func:`boundary_vertices`) the counts gain a
     ``boundary_critical`` entry: non-regular vertices lying on the domain
@@ -215,66 +226,70 @@ def critical_points(
     types = np.empty(sm.n_vertices, dtype=np.int32)
     cols = consume.degree_cols(pre, ("VV", "VT")) if mode == "device" else None
 
-    def _prefetch_batch(b0):
-        """Dispatch the producer for batch [b0, b0+batch) without blocking."""
-        if not (lookahead_hint and hasattr(ds, "prefetch")):
-            return
-        nxt = list(range(b0, min(b0 + batch_segments, ns)))
-        if not nxt:
-            return
-        if hasattr(ds, "prefetch_many"):
-            ds.prefetch_many({"VV": nxt, "VT": nxt})
-        else:
-            for R in ("VV", "VT"):
-                ds.prefetch(R, nxt)
+    batches = [list(range(b0, min(b0 + batch_segments, ns)))
+               for b0 in range(0, ns, batch_segments)]
 
-    pending = []        # device arm: (gid, n_rows, device types) per batch
-    _prefetch_batch(0)  # prime the pipeline before the first consume
-    for b0 in range(0, ns, batch_segments):
-        segs = list(range(b0, min(b0 + batch_segments, ns)))
-        # issue batch k+1 to the producer BEFORE consuming batch k, so its
-        # kernels execute behind the classification below (double-buffering
-        # through the engine's in-flight futures table)
-        _prefetch_batch(b0 + batch_segments)
-        if mode == "device":
-            # device-resident arm: blocks go pool -> fused classify jit with
-            # no host copy; batch k's types download only after batch k+1
-            # is dispatched (depth-1 double buffer), hiding the host edge
-            # behind device compute without retaining O(mesh) device arrays
+    prefetch = None
+    if lookahead_hint and hasattr(ds, "prefetch"):
+        # dispatched for the worker's NEXT batch before it consumes the
+        # current one, so the kernels execute behind the classification
+        # (double-buffering through the engine's in-flight futures table)
+        def prefetch(segs):
+            if hasattr(ds, "prefetch_many"):
+                ds.prefetch_many({"VV": segs, "VT": segs})
+            else:
+                for R in ("VV", "VT"):
+                    ds.prefetch(R, segs)
+
+    if mode == "device":
+        # device-resident arm: blocks go pool -> fused classify jit with
+        # no host copy; batch k's types download only after batch k+1
+        # is dispatched (the scheduler's per-worker depth-1 double buffer),
+        # hiding the host edge behind device compute without retaining
+        # O(mesh) device arrays
+        def consume_batch(i, segs):
             cb = ds.get_full_dev_many(("VV", "VT"), segs, cols=cols)
             t = _classify_batch(cb.M["VV"], cb.M["VT"], cb.gid_dev,
                                 tets_dev, rank_dev,
                                 deg_v=cb.width("VV"), deg_t=cb.width("VT"))
-            if pending:
-                gid_p, n_p, t_p = pending.pop()
-                types[gid_p] = np.asarray(t_p)[:n_p]
-            pending.append((cb.gid, cb.n_rows, t))
-            continue
-        vv = ds.get_batch("VV", segs) if hasattr(ds, "get_batch") else [
-            ds.get("VV", s) for s in segs]
-        vt = ds.get_batch("VT", segs) if hasattr(ds, "get_batch") else [
-            ds.get("VT", s) for s in segs]
-        deg_v = -32 * (-max(M.shape[1] for M, _ in vv) // 32)
-        deg_t = -32 * (-max(M.shape[1] for M, _ in vt) // 32)
+            return cb.gid, cb.n_rows, t
+    else:
+        def consume_batch(i, segs):
+            vv = ds.get_batch("VV", segs) if hasattr(ds, "get_batch") else [
+                ds.get("VV", s) for s in segs]
+            vt = ds.get_batch("VT", segs) if hasattr(ds, "get_batch") else [
+                ds.get("VT", s) for s in segs]
+            deg_v = -32 * (-max(M.shape[1] for M, _ in vv) // 32)
+            deg_t = -32 * (-max(M.shape[1] for M, _ in vt) // 32)
 
-        rows = sum(M.shape[0] for M, _ in vv)
-        rows_pad = ops.bucket_rows(rows)   # stable jit shapes on ragged tails
-        vvM = np.full((rows_pad, deg_v), -1, dtype=np.int32)
-        vtM = np.full((rows_pad, deg_t), -1, dtype=np.int32)
-        gid = np.full(rows_pad, -1, dtype=np.int32)
-        at = 0
-        for s, (Mv, _), (Mt, _) in zip(segs, vv, vt):
-            n = Mv.shape[0]
-            vvM[at:at + n, :Mv.shape[1]] = Mv
-            vtM[at:at + n, :Mt.shape[1]] = Mt
-            gid[at:at + n] = np.arange(sm.I_V[s], sm.I_V[s] + n)
-            at += n
-        t = _classify_batch(jnp.asarray(vvM), jnp.asarray(vtM),
-                            jnp.asarray(gid), tets_dev, rank_dev,
-                            deg_v=deg_v, deg_t=deg_t)
-        types[gid[:rows]] = np.asarray(t)[:rows]
-    for gid, n, t in pending:   # drain the double buffer (last batch)
-        types[gid] = np.asarray(t)[:n]
+            rows = sum(M.shape[0] for M, _ in vv)
+            rows_pad = ops.bucket_rows(rows)  # stable shapes, ragged tails
+            vvM = np.full((rows_pad, deg_v), -1, dtype=np.int32)
+            vtM = np.full((rows_pad, deg_t), -1, dtype=np.int32)
+            gid = np.full(rows_pad, -1, dtype=np.int32)
+            at = 0
+            for s, (Mv, _), (Mt, _) in zip(segs, vv, vt):
+                n = Mv.shape[0]
+                vvM[at:at + n, :Mv.shape[1]] = Mv
+                vtM[at:at + n, :Mt.shape[1]] = Mt
+                gid[at:at + n] = np.arange(sm.I_V[s], sm.I_V[s] + n)
+                at += n
+            t = _classify_batch(jnp.asarray(vvM), jnp.asarray(vtM),
+                                jnp.asarray(gid), tets_dev, rank_dev,
+                                deg_v=deg_v, deg_t=deg_t)
+            return gid[:rows], rows, t
+
+    def finalize(inter):
+        gid, n, t = inter
+        return gid, np.asarray(t)[:n]
+
+    def reduce_batch(i, res):
+        gid, t = res
+        types[gid] = t
+
+    run_partitioned(batches, consume_batch, reduce_batch, workers=workers,
+                    finalize=finalize, prefetch=prefetch, scope=ds,
+                    name="critical_points")
 
     counts = {
         "minima": int((types == MINIMUM).sum()),
@@ -285,6 +300,7 @@ def critical_points(
         "regular": int((types == REGULAR).sum()),
     }
     if flag_boundary:
-        on_bd = boundary_vertices(ds, pre, consumer=consumer)
+        on_bd = boundary_vertices(ds, pre, consumer=consumer,
+                                  workers=workers)
         counts["boundary_critical"] = int((on_bd & (types != REGULAR)).sum())
     return types, counts

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.adjacency import complete_adjacency
+from ..core.scheduler import run_partitioned
 from ..kernels import ops
 from . import consume
 
@@ -205,7 +206,7 @@ def _lower_star_batch(
 
 
 def audit_gradient(ds, pre, grad: GradientField,
-                   batch: int = 4096) -> Dict[str, int]:
+                   batch: int = 4096, workers: int = 1) -> Dict[str, int]:
     """Cross-segment audit of the discrete vector field's matching property.
 
     Lower stars partition the simplices, so pairing decisions made in
@@ -233,7 +234,7 @@ def audit_gradient(ds, pre, grad: GradientField,
 
     if len(f_paired):
         t = grad.pair_f2t[f_paired]
-        M, _ = complete_adjacency(ds, "TT", t, batch=batch)
+        M, _ = complete_adjacency(ds, "TT", t, batch=batch, workers=workers)
         deg = M.shape[1]
         tf_nb = ds.boundary_TF(np.maximum(M, 0).reshape(-1)) \
             .reshape(len(t), deg, 4)
@@ -244,7 +245,7 @@ def audit_gradient(ds, pre, grad: GradientField,
         out["tt_conflicts"] = int(claimed.any(-1).sum())
     if len(e_paired):
         fh = grad.pair_e2f[e_paired]
-        M, _ = complete_adjacency(ds, "FF", fh, batch=batch)
+        M, _ = complete_adjacency(ds, "FF", fh, batch=batch, workers=workers)
         deg = M.shape[1]
         fe_nb = ds.boundary_FE(np.maximum(M, 0).reshape(-1)) \
             .reshape(len(fh), deg, 3)
@@ -298,26 +299,27 @@ def _scatter_batch(g: GradientField, gid, veM, vfM, vtM,
         g.pair_t2f[t_of] = f_of
 
 
-def _scatter_device_batch(g: GradientField, cb, degs, out) -> None:
-    """Download one device batch's results and integrate them (the device
-    arm's host edge); releasing ``cb`` afterwards frees its device
-    buffers, so at most one batch is retained at a time."""
+def _download_device_batch(cb, degs, out):
+    """Download one device batch's results into the
+    :func:`_scatter_batch` argument tuple (the device arm's host edge —
+    the scheduler's finalize step); releasing ``cb`` afterwards frees its
+    device buffers, so each worker retains at most one batch."""
     de, df, dt = degs
     crit_vx, min_e, has_edge, pair, crit, _ = out
     n = cb.n_rows
-    _scatter_batch(
-        g, cb.gid,
-        np.asarray(cb.M["VE"])[:n], np.asarray(cb.M["VF"])[:n],
-        np.asarray(cb.M["VT"])[:n],
-        np.asarray(crit_vx)[:n], np.asarray(min_e)[:n],
-        np.asarray(has_edge)[:n], np.asarray(pair)[:n],
-        np.asarray(crit)[:n], de, df, dt)
+    return (cb.gid,
+            np.asarray(cb.M["VE"])[:n], np.asarray(cb.M["VF"])[:n],
+            np.asarray(cb.M["VT"])[:n],
+            np.asarray(crit_vx)[:n], np.asarray(min_e)[:n],
+            np.asarray(has_edge)[:n], np.asarray(pair)[:n],
+            np.asarray(crit)[:n], de, df, dt)
 
 
 def discrete_gradient(
     ds, pre, rank: np.ndarray, batch_segments: int = 8,
     audit: bool = False, consumer: str = "auto",
     co_prefetch: Tuple[str, ...] = (),
+    workers: int = 1,
 ) -> GradientField:
     """Drive the lower-star batches through the data structure (GALE queues
     VE/VF/VT — the paper's 3-queue configuration for this algorithm).
@@ -328,6 +330,13 @@ def discrete_gradient(
     the exact per-mesh degree bounds), ``"host"`` is the PR-3
     numpy-assembly path, ``"auto"`` picks "device" whenever ``ds`` exposes
     the batch API. Bit-identical either way.
+
+    ``workers`` is the consumer-thread count (docs/DESIGN.md §8): the
+    scheduler partitions the segment-batch stream across that many CPU
+    threads, each running the selected arm with its own depth-1 double
+    buffer; per-batch results are scattered in segment order on the calling
+    thread, so the field is bit-identical for any worker count (lower stars
+    partition the simplices, so batch scatters never overlap).
 
     ``co_prefetch`` names extra engine relations to dispatch alongside each
     batch's VE/VF/VT prefetch (the paper's multi-queue proactive
@@ -358,79 +367,84 @@ def discrete_gradient(
         crit_f=np.zeros(nf, bool), crit_t=np.zeros(nt, bool))
 
     ns = sm.n_segments
-    pending = []   # device arm: per-batch device results, assembled at end
     extra = tuple(r for r in co_prefetch
                   if r in getattr(ds, "relations", co_prefetch))
+    batches = [list(range(b0, min(b0 + batch_segments, ns)))
+               for b0 in range(0, ns, batch_segments)]
 
-    def _prefetch_batch(b0):
-        """Dispatch VE/VF/VT production for the next batch without blocking
-        (three kernels in flight round-robin — the paper's 3-queue config),
-        plus any co_prefetch relations a later consumer will need."""
-        if not hasattr(ds, "prefetch"):
-            return
-        nxt = list(range(b0, min(b0 + batch_segments, ns)))
-        if not nxt:
-            return
-        if hasattr(ds, "prefetch_many"):
-            ds.prefetch_many({R: nxt for R in rels + extra})
-        else:
-            for R in rels + extra:
-                ds.prefetch(R, nxt)
+    prefetch = None
+    if hasattr(ds, "prefetch"):
+        # dispatched for the worker's next batch before it consumes the
+        # current one: VE/VF/VT production (three kernels in flight
+        # round-robin — the paper's 3-queue config) plus any co_prefetch
+        # relations a later consumer will need, all overlapping the
+        # lower-star state machines below
+        def prefetch(segs):
+            if hasattr(ds, "prefetch_many"):
+                ds.prefetch_many({R: segs for R in rels + extra})
+            else:
+                for R in rels + extra:
+                    ds.prefetch(R, segs)
 
-    _prefetch_batch(0)  # prime the pipeline before the first consume
-    for b0 in range(0, ns, batch_segments):
-        segs = list(range(b0, min(b0 + batch_segments, ns)))
-        # batch k+1 dispatched before batch k is consumed: the lower-star
-        # state machines below overlap the next batch's relation kernels
-        _prefetch_batch(b0 + batch_segments)
-        if mode == "device":
-            # device-resident arm: blocks go pool -> fused lower-star jit;
-            # batch k's downloads/scatter happen only after batch k+1 is
-            # dispatched (depth-1 double buffer), so the host edge hides
-            # behind device compute without retaining O(mesh) device arrays
+    if mode == "device":
+        # device-resident arm: blocks go pool -> fused lower-star jit;
+        # batch k's downloads happen only after batch k+1 is dispatched
+        # (the scheduler's per-worker depth-1 double buffer), so the host
+        # edge hides behind device compute without retaining O(mesh)
+        # device arrays
+        def consume_batch(i, segs):
             cb = ds.get_full_dev_many(rels, segs, cols=cols)
             de, df, dt = (cb.width(R) for R in rels)
             out = _lower_star_batch(
                 cb.M["VE"], cb.M["VF"], cb.M["VT"], cb.gid_dev,
                 E_dev, F_dev, T_dev, rank_dev, de=de, df=df, dt=dt)
-            if pending:
-                _scatter_device_batch(g, *pending.pop())
-            pending.append((cb, (de, df, dt), out))
-            continue
-        blocks = {R: ds.get_batch(R, segs) for R in rels}
-        degs = {R: -32 * (-max(M.shape[1] for M, _ in blocks[R]) // 32)
-                for R in blocks}
-        rows = sum(M.shape[0] for M, _ in blocks["VE"])
-        rows_pad = ops.bucket_rows(rows)  # stable jit shapes on ragged tails
-        stacked = {R: np.full((rows_pad, degs[R]), -1, np.int32)
-                   for R in blocks}
-        gid = np.full(rows_pad, -1, dtype=np.int32)
-        at = 0
-        for i, s in enumerate(segs):
-            n = blocks["VE"][i][0].shape[0]
-            for R in blocks:
-                M = blocks[R][i][0]
-                stacked[R][at:at + n, :M.shape[1]] = M
-            gid[at:at + n] = np.arange(sm.I_V[s], sm.I_V[s] + n)
-            at += n
+            return cb, (de, df, dt), out
 
-        crit_vx, min_e, has_edge, pair, crit, exists = _lower_star_batch(
-            jnp.asarray(stacked["VE"]), jnp.asarray(stacked["VF"]),
-            jnp.asarray(stacked["VT"]), jnp.asarray(gid),
-            E_dev, F_dev, T_dev, rank_dev,
-            de=degs["VE"], df=degs["VF"], dt=degs["VT"])
+        def finalize(inter):
+            return _download_device_batch(*inter)
+    else:
+        def consume_batch(i, segs):
+            blocks = {R: ds.get_batch(R, segs) for R in rels}
+            degs = {R: -32 * (-max(M.shape[1] for M, _ in blocks[R]) // 32)
+                    for R in blocks}
+            rows = sum(M.shape[0] for M, _ in blocks["VE"])
+            rows_pad = ops.bucket_rows(rows)  # stable shapes, ragged tails
+            stacked = {R: np.full((rows_pad, degs[R]), -1, np.int32)
+                       for R in blocks}
+            gid = np.full(rows_pad, -1, dtype=np.int32)
+            at = 0
+            for i_s, s in enumerate(segs):
+                n = blocks["VE"][i_s][0].shape[0]
+                for R in blocks:
+                    M = blocks[R][i_s][0]
+                    stacked[R][at:at + n, :M.shape[1]] = M
+                gid[at:at + n] = np.arange(sm.I_V[s], sm.I_V[s] + n)
+                at += n
+            out = _lower_star_batch(
+                jnp.asarray(stacked["VE"]), jnp.asarray(stacked["VF"]),
+                jnp.asarray(stacked["VT"]), jnp.asarray(gid),
+                E_dev, F_dev, T_dev, rank_dev,
+                de=degs["VE"], df=degs["VF"], dt=degs["VT"])
+            return gid, rows, stacked, degs, out
 
-        de, df, dt = degs["VE"], degs["VF"], degs["VT"]
-        _scatter_batch(
-            g, gid[:rows],
-            stacked["VE"][:rows], stacked["VF"][:rows], stacked["VT"][:rows],
-            np.asarray(crit_vx)[:rows], np.asarray(min_e)[:rows],
-            np.asarray(has_edge)[:rows], np.asarray(pair)[:rows],
-            np.asarray(crit)[:rows], de, df, dt)
-    for item in pending:   # drain the double buffer (last batch)
-        _scatter_device_batch(g, *item)
+        def finalize(inter):
+            gid, rows, stacked, degs, out = inter
+            crit_vx, min_e, has_edge, pair, crit, _ = out
+            return (gid[:rows], stacked["VE"][:rows], stacked["VF"][:rows],
+                    stacked["VT"][:rows],
+                    np.asarray(crit_vx)[:rows], np.asarray(min_e)[:rows],
+                    np.asarray(has_edge)[:rows], np.asarray(pair)[:rows],
+                    np.asarray(crit)[:rows],
+                    degs["VE"], degs["VF"], degs["VT"])
+
+    def reduce_batch(i, args):
+        _scatter_batch(g, *args)
+
+    run_partitioned(batches, consume_batch, reduce_batch, workers=workers,
+                    finalize=finalize, prefetch=prefetch, scope=ds,
+                    name="discrete_gradient")
     if audit:
-        report = audit_gradient(ds, pre, g)
+        report = audit_gradient(ds, pre, g, workers=workers)
         if any(report.values()):
             raise ValueError(f"gradient matching audit failed: {report}")
     return g

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.adjacency import complete_adjacency
+from ..core.scheduler import run_partitioned
 from . import consume
 from .discrete_gradient import GradientField
 
@@ -84,25 +85,34 @@ def _pointer_jump(succ: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.fori_loop(0, rounds, body, succ)
 
 
-def _gather_ft(ds, pre, batch_segments: int = 16) -> np.ndarray:
+def _gather_ft(ds, pre, batch_segments: int = 16,
+               workers: int = 1) -> np.ndarray:
     """Assemble the global FT table (nf, 2) through the data structure —
-    every segment's FT block is produced/consumed (GALE's FT queue)."""
+    every segment's FT block is produced/consumed (GALE's FT queue). The
+    batch stream goes through the consumer scheduler: each worker
+    dispatches its next batch before integrating the current one, and rows
+    land in disjoint per-segment slices reduced in segment order."""
     nf = pre.n_faces
     ft = np.full((nf, 2), -1, dtype=np.int64)
     ns = pre.smesh.n_segments
-    if hasattr(ds, "prefetch"):  # prime the pipeline before the first consume
-        ds.prefetch("FT", list(range(0, min(batch_segments, ns))))
-    for b0 in range(0, ns, batch_segments):
-        segs = list(range(b0, min(b0 + batch_segments, ns)))
-        # batch k+1 dispatched before batch k is integrated below
-        if hasattr(ds, "prefetch"):
-            ds.prefetch("FT", list(range(b0 + batch_segments,
-                                         min(b0 + 2 * batch_segments, ns))))
-        for s, (M, L) in zip(segs, ds.get_batch("FT", segs)):
+    batches = [list(range(b0, min(b0 + batch_segments, ns)))
+               for b0 in range(0, ns, batch_segments)]
+    prefetch = ((lambda segs: ds.prefetch("FT", segs))
+                if hasattr(ds, "prefetch") else None)
+
+    def consume_batch(i, segs):
+        return segs, ds.get_batch("FT", segs)
+
+    def reduce_batch(i, res):
+        segs, blocks = res
+        for s, (M, L) in zip(segs, blocks):
             lo = int(pre.I_F[s])
             n = M.shape[0]
             w = min(2, M.shape[1])
             ft[lo:lo + n, :w] = M[:, :w]
+
+    run_partitioned(batches, consume_batch, reduce_batch, workers=workers,
+                    prefetch=prefetch, scope=ds, name="gather_ft")
     return ft
 
 
@@ -158,7 +168,8 @@ def _across_successors(M: jnp.ndarray,   # (p, deg) completed TT, -1 pad
 
 
 def _ascending_successors_tt(ds, pre, grad: GradientField,
-                             batch: int, mode: str = "host") -> np.ndarray:
+                             batch: int, mode: str = "host",
+                             workers: int = 1) -> np.ndarray:
     """Tet -> tet-across-its-paired-face successor via completed TT: the
     unique cross-segment TT neighbour whose boundary contains the paired
     face. Bit-identical to the FT-gather successor.
@@ -175,7 +186,8 @@ def _ascending_successors_tt(ds, pre, grad: GradientField,
     f = grad.pair_t2f[paired]
     if mode == "device" and hasattr(ds, "get_full_dev"):
         M_dev, _ = complete_adjacency(ds, "TT", paired, batch=batch,
-                                      path="device", out="dev")
+                                      path="device", out="dev",
+                                      workers=workers)
         nxt, has = _across_successors(
             M_dev, jnp.asarray(f.astype(np.int32)),
             jnp.asarray(pre.F.astype(np.int32)),
@@ -183,7 +195,7 @@ def _ascending_successors_tt(ds, pre, grad: GradientField,
         nxt, has = np.asarray(nxt), np.asarray(has)
         succ[paired[has]] = nxt[has]
         return succ
-    M, _ = complete_adjacency(ds, "TT", paired, batch=batch)
+    M, _ = complete_adjacency(ds, "TT", paired, batch=batch, workers=workers)
     p, deg = M.shape
     tf_nb = ds.boundary_TF(np.maximum(M, 0).reshape(-1)).reshape(p, deg, 4)
     across = (tf_nb == f[:, None, None]).any(-1) & (M >= 0)
@@ -197,7 +209,8 @@ def _ascending_successors_tt(ds, pre, grad: GradientField,
 def morse_smale(ds, pre, grad: GradientField,
                 batch_segments: int = 16,
                 adjacency: str = "auto",
-                consumer: str = "auto") -> MSComplex:
+                consumer: str = "auto",
+                workers: int = 1) -> MSComplex:
     """Extract the MS 1-skeleton + segmentation.
 
     ``adjacency`` selects how ascending successors are assembled: ``"tt"``
@@ -206,7 +219,10 @@ def morse_smale(ds, pre, grad: GradientField,
     completion for TT and FT. ``consumer`` selects the consumer arm
     (docs/DESIGN.md §6): the device arm keeps completed TT rows and the
     targeted FT reads on the accelerator and assembles successors in fused
-    jits. Results are bit-identical across all combinations."""
+    jits. ``workers`` threads the successor-assembly streams (the FT
+    gather's batch stream, or the TT completion's chunk stream) through the
+    consumer scheduler (docs/DESIGN.md §8). Results are bit-identical
+    across all combinations and any worker count."""
     sm = pre.smesh
     nv, nt = sm.n_vertices, sm.n_tets
     E = pre.E
@@ -230,10 +246,10 @@ def morse_smale(ds, pre, grad: GradientField,
         # only the critical faces' FT rows are fetched (targeted segments)
         succ_t = _ascending_successors_tt(ds, pre, grad,
                                           batch=64 * batch_segments,
-                                          mode=mode)
+                                          mode=mode, workers=workers)
         cof_s2 = _cofacet_rows(ds, pre, s2, batch_segments, mode=mode)
     else:
-        ft = _gather_ft(ds, pre, batch_segments)
+        ft = _gather_ft(ds, pre, batch_segments, workers=workers)
         f = grad.pair_t2f                  # (nt,) face this tet is paired to
         cof0 = ft[np.maximum(f, 0), 0]
         cof1 = ft[np.maximum(f, 0), 1]

@@ -129,8 +129,8 @@ def plan_completion(eng: RelationEngine, relation: str,
             pair_query[ok], pair_seg[ok], pair_row[ok])
     segments = np.unique(pair_seg)
 
-    eng.stats.completion_queries += n
-    eng.stats.completion_fanout_blocks += len(segments)
+    eng.stat_bump(completion_queries=n,
+                  completion_fanout_blocks=len(segments))
     if prefetch:
         eng.prefetch_many({relation: [int(s) for s in segments]})
     return CompletionPlan(relation, ids, pair_query, pair_seg,
@@ -193,8 +193,8 @@ def execute_completion(eng: RelationEngine, plan: CompletionPlan
     M[q, np.arange(len(nb)) - offsets[q]] = nb
     L = counts.astype(np.int32)
 
-    eng.stats.completion_raw_neighbors += raw
-    eng.stats.completion_neighbors += len(nb)
+    eng.stat_bump(completion_raw_neighbors=raw,
+                  completion_neighbors=len(nb))
     return M, L
 
 
@@ -275,8 +275,8 @@ def execute_completion_device(eng: RelationEngine, plan: CompletionPlan,
         jnp.asarray(pair_gid), jnp.asarray(pair_at),
         deg_out=deg, backend=eng.backend, inv_key=inv_key, n_global=n_glob)
 
-    eng.stats.completion_raw_neighbors += int(raw)
-    eng.stats.completion_neighbors += int(kept)
+    eng.stat_bump(completion_raw_neighbors=int(raw),
+                  completion_neighbors=int(kept))
     if out == "dev":
         # device-resident consumers take the padded (n, deg) rows as-is;
         # the overflow check costs one scalar reduce, not a block download
@@ -304,7 +304,7 @@ def execute_completion_device(eng: RelationEngine, plan: CompletionPlan,
 def complete_adjacency(
     eng: RelationEngine, relation: str, ids: Sequence[int],
     batch: Optional[int] = None, path: Optional[str] = None,
-    out: str = "host",
+    out: str = "host", workers: int = 1,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Complete EE/FF/TT rows for global simplex ids. Returns padded (M, L).
 
@@ -326,7 +326,11 @@ def complete_adjacency(
     i+1 is planned (and its blocks prefetched) *before* chunk i is executed,
     so relation production overlaps the gather/union work — the same
     produce-ahead idiom the algorithm drivers use for every other relation.
-    The result is bit-identical for any ``batch``."""
+    ``workers=N`` (with ``batch``) partitions the chunk stream across N
+    consumer threads through the scheduler (docs/DESIGN.md §8), each
+    keeping the plan-ahead pipelining for its own chunks; chunk results
+    are assembled in chunk order. The result is bit-identical for any
+    ``batch`` and any ``workers``."""
     if path is None:
         path = ("device" if hasattr(eng, "get_full_dev")
                 and (out == "dev" or jax.default_backend() != "cpu")
@@ -346,12 +350,28 @@ def complete_adjacency(
         return execute(eng, plan_completion(eng, relation, ids))
 
     chunks = [ids[i:i + batch] for i in range(0, len(ids), batch)]
-    plans = [plan_completion(eng, relation, chunks[0])]
-    outs = []
-    for i in range(len(chunks)):
-        if i + 1 < len(chunks):   # plan + prefetch ahead of the execute
-            plans.append(plan_completion(eng, relation, chunks[i + 1]))
-        outs.append(execute(eng, plans[i]))
+    outs: list = [None] * len(chunks)
+    if workers and workers > 1:
+        from .scheduler import run_partitioned
+
+        def consume_chunk(i, chunk):       # plan + prefetch (non-blocking)
+            return plan_completion(eng, relation, chunk)
+
+        def finalize_chunk(plan):          # gather/union one chunk
+            return execute(eng, plan)
+
+        def reduce_chunk(i, res):
+            outs[i] = res
+
+        run_partitioned(chunks, consume_chunk, reduce_chunk,
+                        workers=workers, finalize=finalize_chunk,
+                        scope=eng, name=f"completion/{relation}")
+    else:
+        plans = [plan_completion(eng, relation, chunks[0])]
+        for i in range(len(chunks)):
+            if i + 1 < len(chunks):  # plan + prefetch ahead of the execute
+                plans.append(plan_completion(eng, relation, chunks[i + 1]))
+            outs[i] = execute(eng, plans[i])
     if out == "dev":
         # chunk widths are all deg[relation]: one device concat, no host copy
         return (jnp.concatenate([Mc for Mc, _ in outs]),

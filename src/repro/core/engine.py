@@ -36,6 +36,29 @@ dispatch (the pre-async blocking behaviour, used by the ACTOPO/TopoCluster
 baselines); the wait still lands in ``t_sync`` so the two modes are
 directly comparable.
 
+Multi-consumer thread safety (docs/DESIGN.md §8)
+------------------------------------------------
+
+The paper's CPU side is *multi-consumer*: several host threads execute the
+analysis algorithm concurrently (``core/scheduler.py``). The engine
+serializes all shared-state mutation behind ONE lock + condition variable
+(``self._cond``): every public consumer method acquires it once at entry,
+and every internal step (queues, cache, in-flight table, device block
+pool, stats) runs with it held. The only wait that releases the lock is
+the device sync: the first consumer needing a launch becomes its *syncer*
+(``launch.syncing``), drops the lock for ``jax.block_until_ready``, then
+re-acquires and integrates exactly once; other consumers needing the same
+launch wait on the condition variable until ``launch.done``. Consequences:
+
+  - a block is still never produced twice — request de-dup, dispatch and
+    integration are atomic under the lock for ANY thread interleaving;
+  - stat updates can never be lost (all go through :meth:`_bump` under the
+    lock) and are additionally attributed to the calling worker
+    (:meth:`worker_scope`), so ``merged_worker_stats()`` always equals
+    ``stats``;
+  - results remain bit-identical for any number of consumer threads — the
+    existing any-scheduling contract extended to concurrency.
+
 The engine also keeps the paper's accounting (Table 5/6/7): per-phase wait
 times (enqueue / queue / prepare / kernel dispatch / sync / integrate) and
 cache statistics.
@@ -44,10 +67,12 @@ cache statistics.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
+import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -118,6 +143,77 @@ class EngineStats:
         d = dataclasses.asdict(self)
         d["completion_dedup_ratio"] = self.completion_dedup_ratio
         return d
+
+    def bump(self, **deltas) -> None:
+        """Add counter deltas in place. The engine routes every stat update
+        through this (under its lock), so concurrent consumers never lose
+        increments."""
+        for k, v in deltas.items():
+            setattr(self, k, getattr(self, k) + v)
+
+    @staticmethod
+    def merged(parts: Iterable["EngineStats"]) -> "EngineStats":
+        """Sum every field over ``parts`` into a fresh ``EngineStats``.
+
+        Deterministic for a fixed iteration order — callers pass workers in
+        sorted-key order (:meth:`StatsHost.merged_worker_stats`) so the
+        float sums are reproducible run to run. Int counters merge exactly;
+        the per-worker breakdown of a run therefore round-trips to the
+        global stats."""
+        out = EngineStats()
+        for p in parts:
+            out.bump(**dataclasses.asdict(p))
+        return out
+
+
+class StatsHost:
+    """Thread-safe stats accounting shared by :class:`RelationEngine` and
+    the explicit baseline: a single lock/condition (``self._cond``) guards
+    every counter update, and each update is attributed to the calling
+    *worker thread* (:meth:`worker_scope`) so ``worker_stats`` carries the
+    per-consumer breakdown of docs/DESIGN.md §8. The invariant
+    ``merged_worker_stats() == stats`` holds at all times (exactly for int
+    counters, up to float-summation order for the ``t_*`` phases)."""
+
+    def _init_stats(self) -> None:
+        self.stats = EngineStats()
+        self.worker_stats: Dict[str, EngineStats] = {}
+        self._cond = threading.Condition()
+        self._tl = threading.local()
+
+    @contextlib.contextmanager
+    def worker_scope(self, name: str):
+        """Attribute this thread's stat updates to worker ``name`` (the
+        scheduler wraps each worker loop in one; unscoped updates land on
+        the ``"main"`` worker)."""
+        prev = getattr(self._tl, "worker", None)
+        self._tl.worker = str(name)
+        try:
+            yield
+        finally:
+            self._tl.worker = prev
+
+    def _bump(self, **deltas) -> None:
+        """Stat update; the caller must hold ``self._cond``."""
+        w = getattr(self._tl, "worker", None) or "main"
+        ws = self.worker_stats.get(w)
+        if ws is None:
+            ws = self.worker_stats[w] = EngineStats()
+        self.stats.bump(**deltas)
+        ws.bump(**deltas)
+
+    def stat_bump(self, **deltas) -> None:
+        """Thread-safe counter update for out-of-engine accounting (the
+        completion pipeline in ``core/adjacency.py``)."""
+        with self._cond:
+            self._bump(**deltas)
+
+    def merged_worker_stats(self) -> EngineStats:
+        """Deterministic merge of the per-worker breakdown (sorted worker
+        key order); equals ``stats`` — the scheduler tests assert it."""
+        with self._cond:
+            return EngineStats.merged(
+                self.worker_stats[k] for k in sorted(self.worker_stats))
 
 
 class RelationWidthError(ValueError):
@@ -260,7 +356,8 @@ def _gather_internal(pool_M, pool_L, flat, gid, w: int):
 class _Launch:
     """One dispatched batched kernel whose results may not be ready yet."""
 
-    __slots__ = ("relation", "segments", "M", "L", "n_rows", "done")
+    __slots__ = ("relation", "segments", "M", "L", "n_rows", "done",
+                 "syncing")
 
     def __init__(self, relation, segments, M, L, n_rows):
         self.relation = relation
@@ -269,6 +366,7 @@ class _Launch:
         self.L = L                    # (B_padded, R) device array
         self.n_rows = n_rows          # per-segment internal row counts
         self.done = False
+        self.syncing = False          # a consumer thread owns the sync wait
 
     def is_ready(self) -> bool:
         try:
@@ -277,8 +375,12 @@ class _Launch:
             return False
 
 
-class RelationEngine:
-    """GALE: GPU(TPU)-Aided Localized data structurE."""
+class RelationEngine(StatsHost):
+    """GALE: GPU(TPU)-Aided Localized data structurE.
+
+    Safe for concurrent use by multiple consumer threads (module docstring
+    + docs/DESIGN.md §8): every public consumer method acquires the engine
+    lock exactly once; internal ``_``-prefixed steps assume it is held."""
 
     def __init__(
         self,
@@ -331,7 +433,7 @@ class RelationEngine:
         # references; the host cache keeps the data.
         self._dev_pool = _DevBlockPool(
             max(1, dev_pool_segments // max(1, batch_max)))
-        self.stats = EngineStats()
+        self._init_stats()   # stats + per-worker breakdown + engine lock
 
         # Device-resident stacked tables (copied once, like the paper copying
         # initialized arrays to GPU global memory).
@@ -373,11 +475,15 @@ class RelationEngine:
     def request(self, relation: str, segments: Sequence[int]) -> None:
         """Non-blocking enqueue (consumer -> leader queue).
 
-        Never blocks and never launches a kernel: it only appends traversal
-        hints to the per-relation pending queue. De-dup guarantee: a segment
-        already cached, in flight, or pending is not enqueued again, so a
-        block is never produced twice no matter how often it is requested.
-        """
+        Never blocks on the device and never launches a kernel: it only
+        appends traversal hints to the per-relation pending queue. De-dup
+        guarantee: a segment already cached, in flight, or pending is not
+        enqueued again, so a block is never produced twice no matter how
+        often it is requested."""
+        with self._cond:
+            self._request(relation, segments)
+
+    def _request(self, relation: str, segments: Sequence[int]) -> None:
         t0 = time.perf_counter()
         q = self.queues[relation]
         qs = set(q)
@@ -388,7 +494,7 @@ class RelationEngine:
                     and s not in qs):
                 q.append(s)
                 qs.add(s)
-        self.stats.t_enqueue += time.perf_counter() - t0
+        self._bump(t_enqueue=time.perf_counter() - t0)
 
     def get(self, relation: str, segment: int) -> Tuple[np.ndarray, np.ndarray]:
         """Fetch the (M, L) relation block for one segment.
@@ -402,10 +508,11 @@ class RelationEngine:
         the segment, dispatches one batched launch, and waits for it.
         De-dup guarantee: a miss never re-produces segments that are cached
         or in flight — only genuinely missing ones enter the launch."""
-        segment = int(segment)
-        self.stats.requests += 1
-        self._count(relation, segment)
-        return self._fetch(relation, segment)
+        with self._cond:
+            segment = int(segment)
+            self._bump(requests=1)
+            self._count(relation, segment)
+            return self._fetch(relation, segment)
 
     def get_full(self, relation: str, segment: int
                  ) -> Tuple[np.ndarray, np.ndarray]:
@@ -417,10 +524,11 @@ class RelationEngine:
         method, so misses take the normal dispatch path and are counted in
         ``stats.cache_misses`` (never silently served as empty). Blocking
         behavior and de-dup guarantee are identical to :meth:`get`."""
-        segment = int(segment)
-        self.stats.requests += 1
-        self._count(relation, segment)
-        return self._fetch(relation, segment, full=True)
+        with self._cond:
+            segment = int(segment)
+            self._bump(requests=1)
+            self._count(relation, segment)
+            return self._fetch(relation, segment, full=True)
 
     def get_full_dev(self, relation: str, segment: int
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -435,7 +543,8 @@ class RelationEngine:
         Misses take the normal dispatch path and are counted exactly like
         :meth:`get_full`; blocking behavior and de-dup guarantee are
         identical."""
-        M, L, i = self._dev_entry(relation, int(segment))
+        with self._cond:
+            M, L, i = self._dev_entry(relation, int(segment))
         return (M, L) if i is None else (M[i], L[i])
 
     def get_full_dev_batch(self, relation: str, segments: Sequence[int],
@@ -451,9 +560,10 @@ class RelationEngine:
         launch are assembled with ONE device gather per launch (plus one
         permutation take) instead of one slice per segment — the completion
         gather path's pool builder."""
-        segments = [int(s) for s in segments]
-        ents = [self._dev_entry(relation, s) for s in segments]
-        return self._stack_entries(ents, pad_to)
+        with self._cond:
+            segments = [int(s) for s in segments]
+            ents = [self._dev_entry(relation, s) for s in segments]
+            return self._stack_entries(ents, pad_to)
 
     def _stack_entries(self, ents, pad_to: Optional[int]
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -492,8 +602,8 @@ class RelationEngine:
     def _dev_entry(self, relation: str, segment: int):
         """Pooled device block entry ``(M, L, idx_or_None)`` for one
         segment, producing/uploading on miss (shared by get_full_dev and
-        get_full_dev_batch; one request count per call)."""
-        self.stats.requests += 1
+        get_full_dev_batch; one request count per call). Lock held."""
+        self._bump(requests=1)
         self._count(relation, segment)
         key = (relation, segment)
         ent = self._dev_pool.get(key)
@@ -511,9 +621,9 @@ class RelationEngine:
             if ent is None:
                 ent = (jnp.asarray(Mh), jnp.asarray(Lh), None)
                 self._dev_pool.put(key, *ent)
-                self.stats.devpool_uploads += 1
+                self._bump(devpool_uploads=1)
                 return ent
-        self.stats.devpool_hits += 1
+        self._bump(devpool_hits=1)
         return ent
 
     def get_full_dev_many(self, relations: Sequence[str],
@@ -550,8 +660,9 @@ class RelationEngine:
                     f"get_full_dev_many needs one subject kind per batch: "
                     f"{relations} mixes {kind!r} and {r[0]!r}")
         segments = [int(s) for s in segments]
-        self.prefetch_many({r: segments for r in relations})
-
+        # host-side index assembly reads only immutable per-mesh tables, so
+        # it runs OUTSIDE the engine lock — concurrent consumer threads
+        # (docs/DESIGN.md §8) only serialize on the producer interaction
         n_int, _ = self.tables.counts(kind)
         iv = self.pre.interval(kind)
         ns_rows = [int(n_int[s]) for s in segments]
@@ -569,13 +680,21 @@ class RelationEngine:
         gid_pad[:n_rows] = gid
         gid_dev = jnp.asarray(gid_pad.astype(np.int32))
 
+        # producer interaction under the lock: prefetch + pool-entry
+        # resolution (which may sync in-flight launches)
+        with self._cond:
+            self._prefetch_many({r: segments for r in relations})
+            ents_by_rel = {r: [self._dev_entry(r, s) for s in segments]
+                           for r in relations}
+
+        # the gathers run on held array references — outside the lock
         M: Dict[str, jnp.ndarray] = {}
         L: Dict[str, jnp.ndarray] = {}
         for r in relations:
             # fast path: every segment's block lives in ONE retained launch
             # (the common steady state) — a single fused gather straight off
             # the launch array, no per-segment slicing or stacking
-            ents = [self._dev_entry(r, s) for s in segments]
+            ents = ents_by_rel[r]
             aid = id(ents[0][0])
             if (all(e[2] is not None for e in ents)
                     and all(id(e[0]) == aid for e in ents)):
@@ -625,17 +744,18 @@ class RelationEngine:
         call blocks until every requested block is ready. Duplicate segment
         ids in ``segments`` are served from the same produced block — the
         de-dup guarantee is per ``(relation, segment)``, not per call."""
-        segments = [int(s) for s in segments]
-        self.stats.requests += len(segments)
-        for s in segments:
-            self._count(relation, s)
-        missing = [s for s in segments
-                   if (relation, s) not in self.cache
-                   and (relation, s) not in self._inflight]
-        if missing:
-            self.request(relation, missing)
-            self._drain([relation])
-        return [self._fetch(relation, s) for s in segments]
+        with self._cond:
+            segments = [int(s) for s in segments]
+            self._bump(requests=len(segments))
+            for s in segments:
+                self._count(relation, s)
+            missing = [s for s in segments
+                       if (relation, s) not in self.cache
+                       and (relation, s) not in self._inflight]
+            if missing:
+                self._request(relation, missing)
+                self._drain([relation])
+            return [self._fetch(relation, s) for s in segments]
 
     def prefetch(self, relation: str, segments: Sequence[int]) -> None:
         """Traversal-order hint: enqueue + dispatch without blocking.
@@ -645,8 +765,9 @@ class RelationEngine:
         (when a later call finds them ready) or at the first blocking read.
         Segments already cached / in flight / pending are skipped entirely
         (de-dup), so repeated prefetch of a traversal window is free."""
-        self.request(relation, segments)
-        self._drain([relation])
+        with self._cond:
+            self._request(relation, segments)
+            self._drain([relation])
 
     def prefetch_many(self, requests: Dict[str, Sequence[int]]) -> None:
         """Prefetch several relations at once without blocking; launches are
@@ -655,9 +776,13 @@ class RelationEngine:
         :meth:`prefetch` per relation but interleaves dispatch fairly;
         unknown relations are ignored. Same de-dup guarantee as
         :meth:`prefetch`."""
+        with self._cond:
+            self._prefetch_many(requests)
+
+    def _prefetch_many(self, requests: Dict[str, Sequence[int]]) -> None:
         for r, segs in requests.items():
             if r in self.queues:
-                self.request(r, segs)
+                self._request(r, segs)
         self._drain([r for r in requests if r in self.queues])
 
     def local_rows(self, kind: str, segs: np.ndarray,
@@ -673,18 +798,18 @@ class RelationEngine:
     def _count(self, relation: str, segment: int) -> None:
         key = (relation, segment)
         if key in self.cache:
-            self.stats.cache_hits += 1
+            self._bump(cache_hits=1)
         elif key in self._inflight:
-            self.stats.cache_hits += 1
-            self.stats.inflight_hits += 1
+            self._bump(cache_hits=1, inflight_hits=1)
         else:
-            self.stats.cache_misses += 1
+            self._bump(cache_misses=1)
 
     def _fetch(self, relation: str, segment: int, full: bool = False
                ) -> Tuple[np.ndarray, np.ndarray]:
         """Stat-free read: serve from cache, else sync the in-flight launch,
         else queue-jump + dispatch + sync. Used by get()/get_full()/
-        get_batch(); ``full`` keeps external + padding rows."""
+        get_batch(); ``full`` keeps external + padding rows. Lock held
+        (only :meth:`_sync` may release it while waiting on the device)."""
         key = (relation, segment)
         while True:
             hit = self.cache.get(key)
@@ -700,20 +825,23 @@ class RelationEngine:
                 if segment in q:
                     q.remove(segment)
                 q.insert(0, segment)
-                self.stats.t_queue += time.perf_counter() - t0
+                self._bump(t_queue=time.perf_counter() - t0)
                 launch = self._dispatch(relation)
             if launch is not None:
                 self._sync(launch)
             # loop: a prefetched launch's own integration may have
-            # LRU-evicted this segment (cache smaller than the launch), in
-            # which case it must be re-dispatched, now at the batch front
+            # LRU-evicted this segment (cache smaller than the launch, or a
+            # concurrent consumer's integrations), in which case it must be
+            # re-dispatched, now at the batch front; a self-dispatched
+            # launch always syncs under one continuous lock hold, so the
+            # MRU put guarantees the re-read hits and the loop terminates
         M, L, n_rows = hit
         t0 = time.perf_counter()
         if full:
             out = (np.asarray(M), np.asarray(L))
         else:
             out = (np.asarray(M[:n_rows]), np.asarray(L[:n_rows]))
-        self.stats.t_integrate += time.perf_counter() - t0
+        self._bump(t_integrate=time.perf_counter() - t0)
         return out
 
     def _drain(self, relations: Optional[Sequence[str]] = None) -> None:
@@ -738,9 +866,10 @@ class RelationEngine:
 
     def _harvest(self) -> None:
         """Retire completed in-flight launches into the cache without
-        blocking (zero-wait integration of finished futures)."""
+        blocking (zero-wait integration of finished futures). Launches a
+        consumer thread is already syncing are left to that thread."""
         for launch in self._flights:
-            if not launch.done and launch.is_ready():
+            if not launch.done and not launch.syncing and launch.is_ready():
                 self._integrate(launch)
         if any(l.done for l in self._flights):
             self._flights = collections.deque(
@@ -748,13 +877,38 @@ class RelationEngine:
 
     def _sync(self, launch: _Launch) -> None:
         """Block until a dispatched launch is ready (consumer wait — the
-        paper's Fig. 10 'waiting' metric) and integrate it."""
+        paper's Fig. 10 'waiting' metric) and integrate it exactly once.
+
+        Lock held exactly once on entry. The first consumer to need the
+        launch becomes its *syncer*: it releases the lock for the device
+        wait, re-acquires, and integrates. Concurrent consumers needing the
+        same launch wait on the condition variable instead of issuing a
+        second device wait; each accounts its own wall-clock wait in
+        ``t_sync`` (so per-worker sync time reflects real consumer stalls).
+        If the syncer fails before integrating (e.g. the launch overflows
+        ``deg[relation]`` — :class:`RelationWidthError`), a waiter takes
+        over and surfaces the same error instead of hanging."""
         if launch.done:
             return
         t0 = time.perf_counter()
-        jax.block_until_ready((launch.M, launch.L))
-        self.stats.t_sync += time.perf_counter() - t0
+        if launch.syncing:
+            while launch.syncing and not launch.done:
+                self._cond.wait()
+            if not launch.done:       # syncer failed: take over the sync
+                return self._sync(launch)
+            self._bump(t_sync=time.perf_counter() - t0)
+            return
+        launch.syncing = True
+        self._cond.release()
+        try:
+            jax.block_until_ready((launch.M, launch.L))
+        finally:
+            self._cond.acquire()
+            launch.syncing = False
+            self._cond.notify_all()
+        self._bump(t_sync=time.perf_counter() - t0)
         self._integrate(launch)
+        self._cond.notify_all()
 
     def _integrate(self, launch: _Launch) -> None:
         if launch.done:
@@ -789,8 +943,8 @@ class RelationEngine:
             # for get_full_dev (holds a reference to the launch arrays)
             self._dev_pool.put((launch.relation, s), launch.M, launch.L, i)
         launch.done = True
-        self.stats.evictions = self.cache.evictions
-        self.stats.t_integrate += time.perf_counter() - t0
+        self._bump(evictions=self.cache.evictions - self.stats.evictions,
+                   t_integrate=time.perf_counter() - t0)
 
     def _lookahead_segments(self, relation: str, batch: List[int]) -> List[int]:
         """Extend a drained batch with subsequent segments (paper §4.5:
@@ -830,7 +984,7 @@ class RelationEngine:
                 continue
             batch.append(s)
         if not batch:
-            self.stats.t_prepare += time.perf_counter() - t0
+            self._bump(t_prepare=time.perf_counter() - t0)
             return None
         look = self._lookahead_segments(relation, batch)
         room = self.batch_max - len(batch)
@@ -857,15 +1011,14 @@ class RelationEngine:
             tabX = self._table_dev(kx, segs)
             tabY = self._table_dev(ky, segs)
             colg = jnp.take(self._dev[_GLOBAL_NAME[ky]], segs, axis=0)
-        self.stats.t_prepare += time.perf_counter() - t0
+        self._bump(t_prepare=time.perf_counter() - t0)
 
         t1 = time.perf_counter()
         M, L = ops.relation_block(
             relation, tabX, tabY, colg, nvl, deg=deg, backend=self.backend,
             block_x=self.block_x, block_y=self.block_y)
-        self.stats.t_kernel += time.perf_counter() - t1
-        self.stats.kernel_launches += 1
-        self.stats.segments_produced += len(batch)
+        self._bump(t_kernel=time.perf_counter() - t1, kernel_launches=1,
+                   segments_produced=len(batch))
 
         n_int, _ = self.tables.counts(kx if relation != "VV" else "V")
         launch = _Launch(relation, batch, M, L,

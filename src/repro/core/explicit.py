@@ -15,7 +15,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from ..kernels import ops
-from .engine import ConsumerBatch, EngineStats
+from .engine import ConsumerBatch, StatsHost
 from .mesh import _EDGE_COMBOS, _FACE_COMBOS, edge_lookup, face_lookup
 from .segtables import Preconditioned
 
@@ -37,9 +37,14 @@ def _invert_to_padded(src_ids: np.ndarray, dst_ids: np.ndarray, n_src: int,
     return M, counts.astype(np.int32)
 
 
-class ExplicitTriangulation:
+class ExplicitTriangulation(StatsHost):
     """Precompute-everything baseline. ``relations`` limits what gets built
-    (so init time/memory reflect the algorithm's needs, as in TTK)."""
+    (so init time/memory reflect the algorithm's needs, as in TTK).
+
+    Queries are read-only over tables frozen at init, so concurrent
+    consumer threads (``core/scheduler.py``) are safe; the only mutable
+    state is the stats, which go through the thread-safe
+    :class:`StatsHost` accounting shared with the engine."""
 
     def __init__(self, pre: Preconditioned, relations: Sequence[str]):
         self.pre = pre
@@ -49,7 +54,7 @@ class ExplicitTriangulation:
         # pipeline (core/adjacency.py, host path) and its consumers accept
         # the explicit baseline: stats / deg / the built relation set.
         self.relations = tuple(relations)
-        self.stats = EngineStats()
+        self._init_stats()   # stats + per-worker breakdown + lock
         self.deg = dict(ops.DEFAULT_DEG)
         t0 = time.perf_counter()
         for r in relations:
@@ -243,8 +248,8 @@ class ExplicitTriangulation:
             Lp[:n_rows] = np.minimum(Lg[gid], w)
             M[r] = jnp.asarray(Mp)
             L[r] = jnp.asarray(Lp)
-            self.stats.requests += len(segments)
-            self.stats.devpool_uploads += len(segments)
+            self.stat_bump(requests=len(segments),
+                           devpool_uploads=len(segments))
         return ConsumerBatch(kind=kind, segments=tuple(segments),
                              n_rows=n_rows, gid=gid,
                              gid_dev=jnp.asarray(gid_pad.astype(np.int32)),
@@ -309,6 +314,7 @@ class TopoClusterDS:
             pre, relations, backend=backend, lookahead=0, batch_max=1,
             cache_segments=8, async_dispatch=False, **kw)
         self.stats = self.engine.stats
+        self.worker_scope = self.engine.worker_scope
 
     def get(self, relation, segment):
         return self.engine.get(relation, segment)
@@ -336,6 +342,7 @@ class ActopoDS:
             batch_max=1, cache_segments=cache_segments,
             async_dispatch=False, **kw)
         self.stats = self.engine.stats
+        self.worker_scope = self.engine.worker_scope
 
     def get(self, relation, segment):
         return self.engine.get(relation, segment)

@@ -1,14 +1,20 @@
-"""Scheduling fuzz for the async engine contract (docs/DESIGN.md §3):
+"""Scheduling fuzz for the async engine contract (docs/DESIGN.md §3/§8):
 
-randomized prefetch / get / get_batch / request interleavings, random
-lookahead / batch_max / cache capacities (including capacity smaller than a
-launch) must
+randomized prefetch / get / get_batch / request / get_full_dev_many
+interleavings — single-threaded AND from 2–8 concurrent consumer threads —
+over random lookahead / batch_max / cache capacities (including capacity
+smaller than a launch) must
 
   - return blocks bit-identical to a blocking reference engine,
   - never produce a (relation, segment) block twice while it is cached or
     in flight: every launch is duplicate-free, and with no evictions
-    ``segments_produced`` equals the number of distinct produced blocks.
+    ``segments_produced`` equals the number of distinct produced blocks,
+  - never lose stat updates (hits + misses == requests; the per-worker
+    breakdown merges back to the global stats),
+  - never deadlock: every thread joins within the test's timeout.
 """
+
+import threading
 
 import numpy as np
 import pytest
@@ -94,3 +100,103 @@ def test_fuzzed_interleavings_bit_identical(setup, seed):
         assert eng.stats.segments_produced == len(distinct)
     assert eng.stats.cache_hits + eng.stats.cache_misses == (
         eng.stats.requests)
+
+
+def _check_block(eng, blocks, r, s, M, L):
+    Mr, Lr = blocks[(r, int(s))]
+    np.testing.assert_array_equal(np.asarray(M), Mr)
+    np.testing.assert_array_equal(np.asarray(L), Lr)
+
+
+def _fuzz_ops(eng, blocks, ns, rng, iters):
+    """One consumer's randomized op stream (shared by every fuzz worker)."""
+    for _ in range(iters):
+        r = RELS[int(rng.integers(len(RELS)))]
+        segs = rng.integers(0, ns, size=int(rng.integers(1, 5)))
+        op = int(rng.integers(7))
+        if op == 0:
+            eng.request(r, segs)
+        elif op == 1:
+            eng.prefetch(r, segs)
+        elif op == 2:
+            eng.prefetch_many({R: segs for R in RELS})
+        elif op == 3:
+            M, L = eng.get(r, int(segs[0]))
+            _check_block(eng, blocks, r, segs[0], M, L)
+        elif op == 4:
+            for (M, L), s in zip(eng.get_batch(r, segs), segs):
+                _check_block(eng, blocks, r, s, M, L)
+        elif op == 5:
+            Mf, Lf = eng.get_full(r, int(segs[0]))
+            n = blocks[(r, int(segs[0]))][0].shape[0]
+            _check_block(eng, blocks, r, segs[0], Mf[:n], Lf[:n])
+        else:
+            # multi-relation device-batch read: internal rows of the
+            # (sorted, unique) segments across both relations
+            uniq = sorted(set(int(s) for s in segs))
+            cb = eng.get_full_dev_many(RELS, uniq)
+            at = 0
+            for s in uniq:
+                n = blocks[(RELS[0], s)][0].shape[0]
+                for R in RELS:
+                    Mr, Lr = blocks[(R, s)]
+                    M = np.asarray(cb.M[R])[at:at + n, :Mr.shape[1]]
+                    L = np.asarray(cb.L[R])[at:at + n]
+                    np.testing.assert_array_equal(M, Mr)
+                    np.testing.assert_array_equal(L, Lr)
+                at += n
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_concurrent_fuzzed_interleavings(setup, seed):
+    """2–8 consumer threads fuzzing the full consumer surface concurrently
+    (DESIGN.md §8): blocks stay bit-identical, production stays
+    duplicate-free, stats stay conserved, and nothing deadlocks (joins are
+    bounded; the CI job additionally wraps the suite in a hard timeout)."""
+    sm, pre, blocks = setup
+    ns = sm.n_segments
+    rng = np.random.default_rng(1000 + seed)
+    n_threads = int(rng.choice([2, 3, 4, 8]))
+    cap = int(rng.choice([2, 3, 8, 4096]))        # incl. capacity < batch
+    batch_max = int(rng.choice([1, 4, 16]))
+    lookahead = int(rng.choice([0, 3, 8]))
+    eng = RelationEngine(pre, RELS, cache_segments=cap,
+                         batch_max=batch_max, lookahead=lookahead)
+    launches = _record_launches(eng)
+    errors = []
+
+    def worker(widx):
+        try:
+            with eng.worker_scope(f"w{widx}"):
+                wrng = np.random.default_rng(7919 * seed + widx)
+                _fuzz_ops(eng, blocks, ns, wrng, iters=25)
+        except BaseException as e:   # pragma: no cover - failure path
+            errors.append((widx, e))
+
+    threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+               for w in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+        assert not t.is_alive(), \
+            f"deadlock: consumer thread {t.name} still running"
+    assert not errors, errors[0]
+
+    # producer accounting under concurrency: every launch duplicate-free,
+    # produced count == sum of launch sizes (no lost/double accounting)
+    total = sum(len(segs) for _, segs in launches)
+    assert eng.stats.segments_produced == total
+    for _, segs in launches:
+        assert len(set(segs)) == len(segs)
+    if eng.cache.evictions == 0:
+        distinct = {(r, s) for r, segs in launches for s in segs}
+        assert eng.stats.segments_produced == len(distinct)
+    # stat conservation + per-worker breakdown round trip
+    s = eng.stats
+    assert s.cache_hits + s.cache_misses == s.requests
+    merged = eng.merged_worker_stats()
+    for f in ("requests", "cache_hits", "cache_misses", "inflight_hits",
+              "kernel_launches", "segments_produced", "evictions",
+              "devpool_hits", "devpool_uploads"):
+        assert getattr(merged, f) == getattr(s, f), f
