@@ -10,8 +10,9 @@ the speedup and a bit-identical flag, and every engine-backed record
 asserts the hot loop performed zero per-batch host block reads (all reads
 served by the device pool or counted uploads).
 
-Machine-readable output: ``run()`` writes ``BENCH_algorithms.json``
-(override the path with ``$BENCH_ALGORITHMS_JSON``) with one record per
+Machine-readable output: ``run()`` writes ``BENCH_algorithms.json`` at the
+repo root (override the path with ``$BENCH_ALGORITHMS_JSON``) with one
+record per
 (algo, dataset, structure) — ``t_algo``, ``t_sync``, devpool counters,
 memory — so the perf trajectory is tracked across PRs (CI uploads it as an
 artifact).
@@ -199,7 +200,10 @@ def run(quick: bool = True, datasets=None) -> List[str]:
             "speedup": tot_host / tot_dev, "ok": ident,
         })
 
-    path = os.environ.get("BENCH_ALGORITHMS_JSON", "BENCH_algorithms.json")
+    path = os.environ.get(
+        "BENCH_ALGORITHMS_JSON",
+        os.path.join(os.path.dirname(__file__), "..",
+                     "BENCH_algorithms.json"))
     with open(path, "w") as fh:
         json.dump({"suite": "algorithms", "quick": quick,
                    "records": records}, fh, indent=1)

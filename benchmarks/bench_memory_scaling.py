@@ -1,7 +1,13 @@
 """Memory crossover (paper Figs. 7-9 memory bars): localized tables are a
 flat cost independent of how many relation types the algorithm needs, while
 Explicit Triangulation's storage grows with every additional relation. We
-sweep mesh size x relation count and report bytes/vertex for both."""
+sweep mesh size x relation count and report bytes/vertex for both.
+
+The sharded rows (docs/DESIGN.md §9) drive one relation's full sweep
+through a ``shards=2`` engine and report each shard's device block-pool
+occupancy (``BlockStore.shard_occupancy``): with contiguous shard plans
+the retained blocks split evenly, i.e. per-device pool memory scales as
+1/K of the single-device pool."""
 
 from __future__ import annotations
 
@@ -39,4 +45,15 @@ def run(quick: bool = True) -> List[str]:
                 f"verts={sm.n_vertices};gale_B_per_v={bg / sm.n_vertices:.0f};"
                 f"explicit_B_per_v={be / sm.n_vertices:.0f};"
                 f"ratio={be / max(bg, 1):.2f}"))
+        # per-shard device-pool occupancy after a full single-relation sweep
+        pre2 = precondition(sm, relations=["VT"])
+        eng2 = RelationEngine(pre2, ["VT"], shards=2)
+        eng2.get_full_dev_batch("VT", list(range(sm.n_segments)))
+        occ = eng2.store.shard_occupancy()
+        rows.append(common.row(
+            f"memory_scaling/n{n}/shard_pools", 0.0,
+            "per_shard_entries="
+            + "/".join(str(o["entries"]) for o in occ)
+            + ";per_shard_MB="
+            + "/".join(f"{o['bytes'] / 2**20:.2f}" for o in occ)))
     return rows

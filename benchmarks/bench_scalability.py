@@ -11,10 +11,19 @@ same (algo, structure, backend), and engine runs additionally assert
 ``produced_eq`` — the exact same number of produced segments as the serial
 run, i.e. zero duplicate production under concurrency.
 
-Machine-readable output: ``run()`` writes ``BENCH_scalability.json``
-(override with ``$BENCH_SCALABILITY_JSON``) with one record per cell —
-workers, backend, ``t_algo``, ``t_sync``, produced counts, identical flag —
-mirroring the paper's scalability study as a tracked artifact.
+``run(shards=True)`` sweeps the shard axis instead (docs/DESIGN.md §9):
+shards x workers cells on the ``bar`` dataset (whose shard boundaries are
+planar walls of cross-shard faces), hashing every cell against the
+``shards=1, workers=1`` baseline and asserting exact per-shard stat
+attribution (``produced_eq``: the per-shard ``segments_produced`` counters
+sum precisely to the global ones — every launch belongs to exactly one
+shard, so no segment is produced on more than one shard).
+
+Machine-readable output: ``run()`` writes ``BENCH_scalability.json`` at the
+repo root (override with ``$BENCH_SCALABILITY_JSON``) with one record per
+cell — workers, shards, backend, ``t_algo``, ``t_sync``, produced counts,
+identical flag — mirroring the paper's scalability study as a tracked
+artifact.
 """
 
 from __future__ import annotations
@@ -34,6 +43,12 @@ from . import common
 from .bench_algorithms import CP_RELS, DG_RELS, MS_RELS
 
 WORKERS = (1, 2, 4)
+# shard sweep cells: (shards, workers) — exercises workers < / == / >
+# shard-count composition in the scheduler's shard-affine partition
+SHARD_CELLS = ((1, 1), (1, 4), (2, 1), (2, 4), (4, 1), (4, 4))
+
+_JSON_DEFAULT = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_scalability.json")
 
 
 def _digest(*arrays) -> str:
@@ -74,7 +89,70 @@ def _make(structure: str, pre, rels, backend: str):
     return common.make_ds(structure, pre, rels)
 
 
-def run(quick: bool = True) -> List[str]:
+def _write_json(records: List[Dict], quick: bool, shards: bool) -> None:
+    path = os.environ.get("BENCH_SCALABILITY_JSON", _JSON_DEFAULT)
+    with open(path, "w") as fh:
+        json.dump({"suite": "scalability", "quick": quick,
+                   "workers": WORKERS,
+                   "shard_cells": SHARD_CELLS if shards else None,
+                   "records": records}, fh, indent=1)
+
+
+def run_shards(quick: bool = True) -> List[str]:
+    """The shard-scalability sweep (docs/DESIGN.md §9): every driver across
+    (shards, workers) cells on the cross-shard-heavy ``bar`` dataset, each
+    cell hashed against the (1, 1) baseline."""
+    dataset = "bar"
+    algos = (("critical_points", CP_RELS), ("discrete_gradient", DG_RELS),
+             ("morse_smale", MS_RELS))
+    rows: List[str] = []
+    records: List[Dict] = []
+    for algo, rels in algos:
+        sm, pre, rank, t_pre = common.prepare(dataset, rels)
+        base: Optional[Dict] = None
+        for shards, w in SHARD_CELLS:
+            for _ in range(2):   # warm run first: time pipelines, not jits
+                ds = common.make_ds("gale", pre, rels,
+                                    dev_pool_segments=4096, shards=shards)
+                t, (sig, counts) = common.timed(_run, algo, ds, pre, rank, w)
+            st = ds.stats
+            per = {int(k): v.segments_produced
+                   for k, v in sorted(ds.shard_stats.items())}
+            m = ds.merged_shard_stats()
+            # exact per-shard attribution: shard counters partition the
+            # global ones, so no launch (hence no segment) is double-owned
+            prod_eq = (m.segments_produced == st.segments_produced
+                       and m.kernel_launches == st.kernel_launches
+                       and m.devpool_uploads == st.devpool_uploads)
+            rec = {
+                "algo": algo, "dataset": dataset, "structure": "gale",
+                "backend": "xla", "shards": shards, "workers": w,
+                "t_algo": t, "t_sync": st.t_sync,
+                "produced": st.segments_produced,
+                "produced_per_shard": per, "produced_eq": prod_eq,
+                "signature": sig,
+            }
+            tag = f"scalability/shards/{algo}/{dataset}/k{shards}-w{w}"
+            if base is None:
+                base = rec
+                rows.append(common.row(
+                    tag, t, f"algo_s={t:.3f};produced={st.segments_produced};"
+                    f"produced_eq={prod_eq};baseline=True"))
+            else:
+                ident = sig == base["signature"]
+                rec["identical"] = ident
+                rows.append(common.row(
+                    tag, t, f"algo_s={t:.3f};identical={ident};"
+                    f"produced_eq={prod_eq};"
+                    f"per_shard={'/'.join(str(per[k]) for k in sorted(per))}"))
+            records.append(rec)
+    _write_json(records, quick, shards=True)
+    return rows
+
+
+def run(quick: bool = True, shards: bool = False) -> List[str]:
+    if shards:
+        return run_shards(quick=quick)
     dataset = "fish" if quick else "stent"
     backends = ("xla",) if quick else ("xla", "pallas_interpret")
     algos = (("critical_points", CP_RELS),
@@ -127,8 +205,5 @@ def run(quick: bool = True) -> List[str]:
                             "speedup_vs_w1": speedup})
                 records.append(rec)
 
-    path = os.environ.get("BENCH_SCALABILITY_JSON", "BENCH_scalability.json")
-    with open(path, "w") as fh:
-        json.dump({"suite": "scalability", "quick": quick, "workers": WORKERS,
-                   "records": records}, fh, indent=1)
+    _write_json(records, quick, shards=False)
     return rows

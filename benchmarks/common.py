@@ -48,7 +48,8 @@ def make_ds(kind: str, pre, relations, **kw):
                               block_y=kw.get("block_y", 256),
                               async_dispatch=kw.get("async_dispatch", True),
                               dev_pool_segments=kw.get(
-                                  "dev_pool_segments", 4096))
+                                  "dev_pool_segments", 4096),
+                              shards=kw.get("shards", 1))
     if kind == "actopo":
         return ActopoDS(pre, relations,
                         lookahead=kw.get("lookahead", 8),
@@ -65,8 +66,16 @@ def ds_memory_bytes(ds) -> int:
     if isinstance(ds, ExplicitTriangulation):
         return ds.memory_bytes()
     eng = ds if isinstance(ds, RelationEngine) else ds.engine
+    seen = {id(a) for a in eng._dev.values()}
     tables = sum(int(np.prod(a.shape)) * a.dtype.itemsize
                  for a in eng._dev.values())
+    # sharded engines keep per-shard table slices alongside (or instead of)
+    # the merged view; count each distinct array once
+    for tabs in getattr(eng, "_shard_tables", ()):
+        for a in tabs.values():
+            if id(a) not in seen:
+                seen.add(id(a))
+                tables += int(np.prod(a.shape)) * a.dtype.itemsize
     cache = 0
     for (M, L, n) in eng.cache._store.values():
         cache += int(np.prod(M.shape)) * 4 + int(np.prod(L.shape)) * 4

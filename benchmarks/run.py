@@ -33,6 +33,10 @@ def main() -> None:
     ap.add_argument("--datasets", default="",
                     help="comma list restricting the algorithms suite's "
                          "dataset pool (e.g. --datasets engine)")
+    ap.add_argument("--shards", action="store_true",
+                    help="run the scalability suite's shard sweep "
+                         "(shards x workers cells, DESIGN.md §9) instead "
+                         "of its worker sweep")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -56,6 +60,8 @@ def main() -> None:
         kw = {}
         if name == "algorithms" and args.datasets:
             kw["datasets"] = tuple(args.datasets.split(","))
+        if name == "scalability" and args.shards:
+            kw["shards"] = True
         for row in mod.run(quick=quick, **kw):
             print(row, flush=True)
 

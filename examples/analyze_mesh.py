@@ -7,8 +7,12 @@ device arrays (`get_full_dev_many`) and the GALE engine serves every read
 from its device block pool — the stats line shows zero host block reads.
 ``--workers N`` runs the drivers' consumer arms on N CPU threads through
 the scheduler (docs/DESIGN.md §8); results are bit-identical for any N.
+``--shards K`` builds the GALE engine over K segment shards (one device
+per shard when the platform has them, docs/DESIGN.md §9); the drivers
+follow the engine's plan automatically and results stay bit-identical.
 
   PYTHONPATH=src python examples/analyze_mesh.py [dataset] [--workers N]
+                                                 [--shards K]
 """
 
 import argparse
@@ -32,6 +36,8 @@ def main():
     ap.add_argument("dataset", nargs="?", default="foot")
     ap.add_argument("--workers", type=int, default=1,
                     help="consumer threads per driver (DESIGN.md §8)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="segment shards on the GALE engine (DESIGN.md §9)")
     args = ap.parse_args()
     name, workers = args.dataset, args.workers
     mesh = load_dataset(name, scalar_fn=fields.gaussians(2, k=5, sigma=5.0))
@@ -44,7 +50,8 @@ def main():
 
     for label, ds in (
             ("GALE", RelationEngine(pre, RELS, lookahead=8,
-                                    dev_pool_segments=4096)),
+                                    dev_pool_segments=4096,
+                                    shards=args.shards)),
             ("Explicit", ExplicitTriangulation(pre, RELS))):
         t0 = time.perf_counter()
         _, cp = critical_points(ds, pre, rank, batch_segments=16,
@@ -64,6 +71,11 @@ def main():
               f"{s.devpool_uploads} uploads "
               f"(host reads: {s.requests - s.devpool_hits - s.devpool_uploads})"
               f"  t_sync={s.t_sync:.3f}s")
+        shard_stats = getattr(ds, "shard_stats", {})
+        if len(shard_stats) > 1:
+            per = {k: v.segments_produced
+                   for k, v in sorted(shard_stats.items())}
+            print(f"            shards: segments_produced per shard = {per}")
 
 
 if __name__ == "__main__":

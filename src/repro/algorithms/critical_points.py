@@ -26,7 +26,7 @@ import numpy as np
 
 from ..core.adjacency import complete_adjacency
 from ..core.mesh import _FACE_COMBOS
-from ..core.scheduler import run_partitioned
+from ..core.scheduler import run_partitioned, segment_batches
 from ..kernels import ops
 from . import consume
 
@@ -56,7 +56,8 @@ def _boundary_mask(M: jnp.ndarray,      # (nt, deg) completed TT, -1 pad
 
 
 def boundary_vertices(ds, pre, batch: int = 4096,
-                      consumer: str = "auto", workers: int = 1) -> np.ndarray:
+                      consumer: str = "auto", workers: int = 1,
+                      shards=None) -> np.ndarray:
     """Boolean mask of mesh-boundary vertices, via completed TT.
 
     A tet has one completed-TT neighbour per *interior* face, so a tet with
@@ -72,6 +73,7 @@ def boundary_vertices(ds, pre, batch: int = 4096,
     derives the mask in one fused jit; the host arm is the numpy reference.
     Both arms are bit-identical."""
     sm = pre.smesh
+    consume.shard_plan(ds, shards)   # validate; completion follows the plan
     mask = np.zeros(sm.n_vertices, dtype=bool)
     if sm.n_tets == 0:
         return mask
@@ -192,6 +194,7 @@ def critical_points(
     flag_boundary: bool = False,
     consumer: str = "auto",
     workers: int = 1,
+    shards=None,
 ) -> Tuple[np.ndarray, Dict[str, int]]:
     """Run the algorithm over all segments through data structure ``ds``.
 
@@ -217,17 +220,25 @@ def critical_points(
     With ``flag_boundary=True`` (requires a data structure with TT
     completion, see :func:`boundary_vertices`) the counts gain a
     ``boundary_critical`` entry: non-regular vertices lying on the domain
-    boundary, where the interior link classification is only approximate."""
+    boundary, where the interior link classification is only approximate.
+
+    ``shards`` validates against the data structure's
+    :class:`~repro.distributed.sharding.ShardPlan` (sharding is fixed at
+    engine construction); on a sharded engine the batch stream aligns to
+    shard boundaries and workers partition shard-affinely, both of which
+    preserve bit-identity (docs/DESIGN.md §9)."""
     sm = pre.smesh
     ns = sm.n_segments
     mode = consume.consumer_mode(ds, consumer)
+    plan = consume.shard_plan(ds, shards)
     tets_dev = jnp.asarray(sm.tets.astype(np.int32))
     rank_dev = jnp.asarray(rank)
     types = np.empty(sm.n_vertices, dtype=np.int32)
     cols = consume.degree_cols(pre, ("VV", "VT")) if mode == "device" else None
 
-    batches = [list(range(b0, min(b0 + batch_segments, ns)))
-               for b0 in range(0, ns, batch_segments)]
+    batches = segment_batches(ns, batch_segments, plan)
+    shard_of = ((lambda i: plan.shard_of(batches[i][0]))
+                if plan is not None else None)
 
     prefetch = None
     if lookahead_hint and hasattr(ds, "prefetch"):
@@ -289,7 +300,7 @@ def critical_points(
 
     run_partitioned(batches, consume_batch, reduce_batch, workers=workers,
                     finalize=finalize, prefetch=prefetch, scope=ds,
-                    name="critical_points")
+                    name="critical_points", shard_of=shard_of)
 
     counts = {
         "minima": int((types == MINIMUM).sum()),
@@ -301,6 +312,6 @@ def critical_points(
     }
     if flag_boundary:
         on_bd = boundary_vertices(ds, pre, consumer=consumer,
-                                  workers=workers)
+                                  workers=workers, shards=shards)
         counts["boundary_critical"] = int((on_bd & (types != REGULAR)).sum())
     return types, counts

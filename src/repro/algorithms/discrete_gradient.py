@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.adjacency import complete_adjacency
-from ..core.scheduler import run_partitioned
+from ..core.scheduler import run_partitioned, segment_batches
 from ..kernels import ops
 from . import consume
 
@@ -206,7 +206,8 @@ def _lower_star_batch(
 
 
 def audit_gradient(ds, pre, grad: GradientField,
-                   batch: int = 4096, workers: int = 1) -> Dict[str, int]:
+                   batch: int = 4096, workers: int = 1,
+                   shards=None) -> Dict[str, int]:
     """Cross-segment audit of the discrete vector field's matching property.
 
     Lower stars partition the simplices, so pairing decisions made in
@@ -224,6 +225,7 @@ def audit_gradient(ds, pre, grad: GradientField,
 
     Requires a data structure with engine-native completion for TT and FF.
     All counts are zero for a valid field."""
+    consume.shard_plan(ds, shards)   # validate; completion follows ds's plan
     out = {"tt_conflicts": 0, "ff_conflicts": 0, "reverse_mismatch": 0}
     f_paired = np.nonzero(grad.pair_f2t >= 0)[0]
     out["reverse_mismatch"] += int(
@@ -319,7 +321,7 @@ def discrete_gradient(
     ds, pre, rank: np.ndarray, batch_segments: int = 8,
     audit: bool = False, consumer: str = "auto",
     co_prefetch: Tuple[str, ...] = (),
-    workers: int = 1,
+    workers: int = 1, shards=None,
 ) -> GradientField:
     """Drive the lower-star batches through the data structure (GALE queues
     VE/VF/VT — the paper's 3-queue configuration for this algorithm).
@@ -345,6 +347,11 @@ def discrete_gradient(
     execute behind the lower-star state machines instead of serializing
     after them. Relations the data structure does not serve are ignored.
 
+    ``shards`` follows the engine's :class:`ShardPlan` (docs/DESIGN.md §9):
+    segment batches restart at shard boundaries and workers are assigned
+    shard-affinely, so each worker drives one shard's device pipeline. The
+    field stays bit-identical for any shard count.
+
     With ``audit=True`` (requires engine-native TT/FF completion, see
     :func:`audit_gradient`) the finished field is checked for cross-segment
     matching conflicts and a failure raises ``ValueError``."""
@@ -369,8 +376,10 @@ def discrete_gradient(
     ns = sm.n_segments
     extra = tuple(r for r in co_prefetch
                   if r in getattr(ds, "relations", co_prefetch))
-    batches = [list(range(b0, min(b0 + batch_segments, ns)))
-               for b0 in range(0, ns, batch_segments)]
+    plan = consume.shard_plan(ds, shards)
+    batches = segment_batches(ns, batch_segments, plan)
+    shard_of = ((lambda i: plan.shard_of(batches[i][0]))
+                if plan is not None else None)
 
     prefetch = None
     if hasattr(ds, "prefetch"):
@@ -442,9 +451,9 @@ def discrete_gradient(
 
     run_partitioned(batches, consume_batch, reduce_batch, workers=workers,
                     finalize=finalize, prefetch=prefetch, scope=ds,
-                    name="discrete_gradient")
+                    name="discrete_gradient", shard_of=shard_of)
     if audit:
-        report = audit_gradient(ds, pre, g, workers=workers)
+        report = audit_gradient(ds, pre, g, workers=workers, shards=shards)
         if any(report.values()):
             raise ValueError(f"gradient matching audit failed: {report}")
     return g

@@ -41,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.adjacency import complete_adjacency
-from ..core.scheduler import run_partitioned
+from ..core.scheduler import run_partitioned, segment_batches
 from . import consume
 from .discrete_gradient import GradientField
 
@@ -86,7 +86,7 @@ def _pointer_jump(succ: jnp.ndarray) -> jnp.ndarray:
 
 
 def _gather_ft(ds, pre, batch_segments: int = 16,
-               workers: int = 1) -> np.ndarray:
+               workers: int = 1, plan=None) -> np.ndarray:
     """Assemble the global FT table (nf, 2) through the data structure —
     every segment's FT block is produced/consumed (GALE's FT queue). The
     batch stream goes through the consumer scheduler: each worker
@@ -95,8 +95,9 @@ def _gather_ft(ds, pre, batch_segments: int = 16,
     nf = pre.n_faces
     ft = np.full((nf, 2), -1, dtype=np.int64)
     ns = pre.smesh.n_segments
-    batches = [list(range(b0, min(b0 + batch_segments, ns)))
-               for b0 in range(0, ns, batch_segments)]
+    batches = segment_batches(ns, batch_segments, plan)
+    shard_of = ((lambda i: plan.shard_of(batches[i][0]))
+                if plan is not None else None)
     prefetch = ((lambda segs: ds.prefetch("FT", segs))
                 if hasattr(ds, "prefetch") else None)
 
@@ -112,7 +113,8 @@ def _gather_ft(ds, pre, batch_segments: int = 16,
             ft[lo:lo + n, :w] = M[:, :w]
 
     run_partitioned(batches, consume_batch, reduce_batch, workers=workers,
-                    prefetch=prefetch, scope=ds, name="gather_ft")
+                    prefetch=prefetch, scope=ds, name="gather_ft",
+                    shard_of=shard_of)
     return ft
 
 
@@ -210,7 +212,7 @@ def morse_smale(ds, pre, grad: GradientField,
                 batch_segments: int = 16,
                 adjacency: str = "auto",
                 consumer: str = "auto",
-                workers: int = 1) -> MSComplex:
+                workers: int = 1, shards=None) -> MSComplex:
     """Extract the MS 1-skeleton + segmentation.
 
     ``adjacency`` selects how ascending successors are assembled: ``"tt"``
@@ -221,12 +223,16 @@ def morse_smale(ds, pre, grad: GradientField,
     targeted FT reads on the accelerator and assembles successors in fused
     jits. ``workers`` threads the successor-assembly streams (the FT
     gather's batch stream, or the TT completion's chunk stream) through the
-    consumer scheduler (docs/DESIGN.md §8). Results are bit-identical
-    across all combinations and any worker count."""
+    consumer scheduler (docs/DESIGN.md §8). ``shards`` follows the engine's
+    :class:`ShardPlan` (docs/DESIGN.md §9): the FT gather's batches restart
+    at shard boundaries with shard-affine workers, and the TT completion
+    exchanges per-shard gathers across the mesh. Results are bit-identical
+    across all combinations and any worker or shard count."""
     sm = pre.smesh
     nv, nt = sm.n_vertices, sm.n_tets
     E = pre.E
     mode = consume.consumer_mode(ds, consumer)
+    plan = consume.shard_plan(ds, shards)
     use_tt = adjacency == "tt" or (
         adjacency == "auto" and _supports_completion(ds, "TT", "FT"))
 
@@ -249,7 +255,7 @@ def morse_smale(ds, pre, grad: GradientField,
                                           mode=mode, workers=workers)
         cof_s2 = _cofacet_rows(ds, pre, s2, batch_segments, mode=mode)
     else:
-        ft = _gather_ft(ds, pre, batch_segments, workers=workers)
+        ft = _gather_ft(ds, pre, batch_segments, workers=workers, plan=plan)
         f = grad.pair_t2f                  # (nt,) face this tet is paired to
         cof0 = ft[np.maximum(f, 0), 0]
         cof1 = ft[np.maximum(f, 0), 1]

@@ -301,10 +301,131 @@ def execute_completion_device(eng: RelationEngine, plan: CompletionPlan,
     return M, L
 
 
+def execute_completion_sharded(eng: RelationEngine, plan: CompletionPlan,
+                               out: str = "host"
+                               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Cross-device completion exchange for sharded engines (DESIGN.md §9).
+
+    Each (query, segment) pair is owned by exactly one shard — the one whose
+    device produced and retains the consulted segment's block. Per shard the
+    ``(segment, gid)`` resolve + pool gather of the device path runs over
+    the shard's OWN blocks only (``kernels.completion_gather.
+    gather_candidates``), with non-owned pairs masked to exact zeros; an
+    elementwise integer sum across the shard axis
+    (``distributed.sharding.all_sum_shards`` — a ``psum`` over the
+    ``("data",)`` mesh when shards sit on distinct devices, stack+sum
+    otherwise) then reconstructs the single-pool candidate matrix
+    bit-for-bit, and the shared union epilogue runs once. Bit-identical to
+    :func:`execute_completion_device` with one host round trip per chunk
+    (the final result download)."""
+    from ..distributed.sharding import all_sum_shards
+    splan = eng.shard_plan
+    n = len(plan.ids)
+    P = len(plan.pair_seg)
+    if P == 0:
+        if out == "dev":
+            return (jnp.full((n, eng.deg[plan.relation]), -1,
+                             dtype=jnp.int32),
+                    jnp.zeros(n, dtype=jnp.int32))
+        return (np.full((n, 1), -1, dtype=np.int64),
+                np.zeros(n, dtype=np.int32))
+    relation = plan.relation
+    kind = relation[0]
+    deg = eng.deg[relation]
+    w = _PAIR_WIDTH[kind]
+
+    # shared pair metadata (identical on every shard)
+    counts_p = np.bincount(plan.pair_query, minlength=n)
+    off = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts_p, out=off[1:])
+    pos = np.arange(P, dtype=np.int64) - off[plan.pair_query]
+    pair_at = np.full((_pow2(n), w), -1, dtype=np.int32)
+    pair_at[plan.pair_query, pos] = np.arange(P, dtype=np.int32)
+    P_pad = _pow2(P)
+    pad = P_pad - P
+    pair_seg = np.concatenate(
+        [plan.pair_seg.astype(np.int32), np.zeros(pad, np.int32)])
+    pair_gid = np.concatenate(
+        [plan.ids[plan.pair_query].astype(np.int32),
+         np.full(pad, -1, np.int32)])
+    pair_shard = splan.shard_of_array(plan.pair_seg)
+
+    # per-shard local gathers: each shard consults only its own contiguous
+    # slice of the planned segments, served from ITS device pool
+    parts = []
+    part_devs = []
+    seg_lo = np.searchsorted(plan.segments, splan.bounds[:-1], side="left")
+    seg_hi = np.searchsorted(plan.segments, splan.bounds[1:], side="left")
+    pair_seg_dev = jnp.asarray(pair_seg)
+    pair_gid_dev = jnp.asarray(pair_gid)
+    for k in range(splan.n_shards):
+        segs_k = plan.segments[seg_lo[k]:seg_hi[k]]
+        sel = pair_shard == k
+        if len(segs_k) == 0 or not sel.any():
+            continue
+        pool_M, pool_L = eng.get_full_dev_batch(
+            relation, segs_k, pad_to=_pow2(len(segs_k)))
+        slot_k = np.where(
+            sel, np.searchsorted(segs_k, plan.pair_seg).astype(np.int32),
+            np.int32(-1))
+        pair_slot = np.concatenate([slot_k, np.full(pad, -1, np.int32)])
+        inv_seg, inv_gid, inv_row, inv_key, n_glob = eng.dev_inverse(
+            kind, shard=k)
+        from ..kernels import completion_gather as _cg
+        cand, clen = _cg.gather_candidates(
+            pool_M, pool_L, inv_seg, inv_gid, inv_row,
+            jnp.asarray(pair_slot), pair_seg_dev, pair_gid_dev,
+            inv_key=inv_key, n_global=n_glob)
+        parts.append((cand, clen))
+        part_devs.append(splan.devices[k])
+
+    if not parts:   # no pair resolved anywhere: all-empty rows
+        if out == "dev":
+            return (jnp.full((n, deg), -1, dtype=jnp.int32),
+                    jnp.zeros(n, dtype=jnp.int32))
+        return (np.full((n, 1), -1, dtype=np.int64),
+                np.zeros(n, dtype=np.int32))
+
+    from ..kernels import completion_gather as _cg
+    cand, clen = all_sum_shards(parts, part_devs)
+    if splan.multi_device:
+        # commit every chunk's summed matrix to shard 0's device: the psum
+        # output is replicated over THIS chunk's participant mesh, which
+        # varies chunk to chunk, and out="dev" concatenates across chunks
+        home = splan.devices[0]
+        cand = jax.device_put(cand, home)
+        clen = jax.device_put(clen, home)
+    M_dev, L_dev, raw, kept = _cg.union_pairs(
+        cand, clen, pair_gid_dev, jnp.asarray(pair_at), deg)
+
+    eng.stat_bump(completion_raw_neighbors=int(raw),
+                  completion_neighbors=int(kept))
+    if out == "dev":
+        worst = int(jnp.max(L_dev[:n])) if n else 0
+        if worst > deg:
+            raise RelationWidthError(
+                f"completed {relation!r} row has {worst} neighbours but the "
+                f"preallocated width is deg[{relation!r}]={deg}; construct "
+                f"the engine with deg={{{relation!r}: {worst}}} (or larger).")
+        return M_dev[:n], L_dev[:n]
+    Mh = np.asarray(M_dev)[:n]          # the chunk's ONE host round trip
+    Lh = np.asarray(L_dev)[:n]
+    worst = int(Lh.max()) if n else 0
+    if worst > deg:
+        raise RelationWidthError(
+            f"completed {relation!r} row has {worst} neighbours but the "
+            f"preallocated width is deg[{relation!r}]={deg}; construct the "
+            f"engine with deg={{{relation!r}: {worst}}} (or larger).")
+    width = max(worst, 1)
+    M = Mh[:, :width].astype(np.int64)
+    L = Lh.astype(np.int32)
+    return M, L
+
+
 def complete_adjacency(
     eng: RelationEngine, relation: str, ids: Sequence[int],
     batch: Optional[int] = None, path: Optional[str] = None,
-    out: str = "host", workers: int = 1,
+    out: str = "host", workers: int = 1, shards: Optional[int] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Complete EE/FF/TT rows for global simplex ids. Returns padded (M, L).
 
@@ -330,7 +451,21 @@ def complete_adjacency(
     consumer threads through the scheduler (docs/DESIGN.md §8), each
     keeping the plan-ahead pipelining for its own chunks; chunk results
     are assembled in chunk order. The result is bit-identical for any
-    ``batch`` and any ``workers``."""
+    ``batch`` and any ``workers``.
+
+    ``shards=`` is a validation knob: sharding follows the *engine's*
+    :class:`~repro.distributed.sharding.ShardPlan` automatically (the
+    device arm becomes the cross-device exchange of
+    :func:`execute_completion_sharded` when the engine has more than one
+    shard); passing a ``shards`` count that does not match the engine's
+    plan raises instead of silently running a different topology. The
+    result is bit-identical for any shard count."""
+    n_shards = getattr(getattr(eng, "shard_plan", None), "n_shards", 1)
+    if shards is not None and int(shards) != n_shards:
+        raise ValueError(
+            f"shards={shards} requested but the engine's shard plan has "
+            f"{n_shards} shard(s); construct the RelationEngine with "
+            f"shards={shards}")
     if path is None:
         path = ("device" if hasattr(eng, "get_full_dev")
                 and (out == "dev" or jax.default_backend() != "cpu")
@@ -341,8 +476,11 @@ def complete_adjacency(
         raise ValueError("out='dev' needs the device execute arm "
                          f"(got path={path!r})")
     if path == "device":
+        arm = (execute_completion_sharded if n_shards > 1
+               else execute_completion_device)
+
         def execute(e, p):
-            return execute_completion_device(e, p, out=out)
+            return arm(e, p, out=out)
     else:
         execute = execute_completion
     ids = np.asarray(ids, dtype=np.int64).reshape(-1)

@@ -78,7 +78,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..distributed.sharding import ShardPlan
 from ..kernels import ops
+from .blockstore import BlockStore, DevBlockPool, SegmentCache
 from .mesh import SegmentedMesh
 from .segtables import (
     OFFLOADED_RELATIONS,
@@ -175,9 +177,16 @@ class StatsHost:
     ``merged_worker_stats() == stats`` holds at all times (exactly for int
     counters, up to float-summation order for the ``t_*`` phases)."""
 
+    # producer-side counters attributed per segment shard (each update also
+    # lands on the global/worker stats via _bump, so the §8 worker
+    # invariant is untouched; docs/DESIGN.md §9)
+    _SHARD_FIELDS = ("kernel_launches", "segments_produced",
+                     "devpool_hits", "devpool_uploads", "t_kernel")
+
     def _init_stats(self) -> None:
         self.stats = EngineStats()
         self.worker_stats: Dict[str, EngineStats] = {}
+        self.shard_stats: Dict[int, EngineStats] = {}
         self._cond = threading.Condition()
         self._tl = threading.local()
 
@@ -208,12 +217,32 @@ class StatsHost:
         with self._cond:
             self._bump(**deltas)
 
+    def _bump_shard(self, shard: int, **deltas) -> None:
+        """Producer-side stat update attributed to segment shard ``shard``
+        (in addition to the global/worker landing the caller does via
+        :meth:`_bump`). The caller must hold ``self._cond``."""
+        ss = self.shard_stats.get(shard)
+        if ss is None:
+            ss = self.shard_stats[shard] = EngineStats()
+        ss.bump(**deltas)
+
     def merged_worker_stats(self) -> EngineStats:
         """Deterministic merge of the per-worker breakdown (sorted worker
         key order); equals ``stats`` — the scheduler tests assert it."""
         with self._cond:
             return EngineStats.merged(
                 self.worker_stats[k] for k in sorted(self.worker_stats))
+
+    def merged_shard_stats(self) -> EngineStats:
+        """Deterministic merge of the per-shard producer breakdown (sorted
+        shard order); equals ``stats`` on the producer counters
+        (``_SHARD_FIELDS``): ints exactly, ``t_kernel`` up to float
+        summation order. The sharded-engine tests assert it, and per-shard
+        ``segments_produced`` proves no segment was produced on more than
+        one shard."""
+        with self._cond:
+            return EngineStats.merged(
+                self.shard_stats[k] for k in sorted(self.shard_stats))
 
 
 class RelationWidthError(ValueError):
@@ -223,89 +252,11 @@ class RelationWidthError(ValueError):
     :meth:`RelationEngine._integrate` with the ``deg=`` override to use."""
 
 
-class _SegmentCache:
-    """LRU cache of produced relation blocks: (relation, segment) -> value.
-
-    Mirrors GALE's fixed-size preallocated relation storage: the engine keeps
-    at most ``capacity`` segment-blocks per relation and evicts LRU."""
-
-    def __init__(self, capacity: int):
-        self.capacity = max(1, capacity)
-        self._store: "collections.OrderedDict[Tuple[str, int], tuple]" = (
-            collections.OrderedDict())
-        self.evictions = 0
-
-    def get(self, key):
-        v = self._store.get(key)
-        if v is not None:
-            self._store.move_to_end(key)
-        return v
-
-    def put(self, key, value):
-        if key in self._store:
-            self._store.move_to_end(key)
-        self._store[key] = value
-        while len(self._store) > self.capacity:
-            self._store.popitem(last=False)
-            self.evictions += 1
-
-    def __contains__(self, key):
-        return key in self._store
-
-    def __len__(self):
-        return len(self._store)
-
-
-class _DevBlockPool:
-    """LRU pool of still-device-resident produced blocks for the completion
-    gather path (docs/DESIGN.md §5).
-
-    An entry referencing a retained launch pins the launch's WHOLE padded
-    device array, so the pool is bounded by **backing arrays** (launches),
-    not entries — capacity then honestly measures device memory. Evicting a
-    backing array drops every segment entry it served; the host cache keeps
-    the data, so evicted blocks fall back to a one-time re-upload."""
-
-    def __init__(self, max_arrays: int):
-        self.max_arrays = max(1, max_arrays)
-        # id(M) -> (M, L, set of (relation, segment) keys served)
-        self._arrays: "collections.OrderedDict[int, tuple]" = (
-            collections.OrderedDict())
-        self._entries: Dict[Tuple[str, int], Tuple[int, Optional[int]]] = {}
-        self.evictions = 0
-
-    def get(self, key):
-        ent = self._entries.get(key)
-        if ent is None:
-            return None
-        aid, i = ent
-        self._arrays.move_to_end(aid)
-        M, L, _ = self._arrays[aid]
-        return M, L, i
-
-    def put(self, key, M, L, i) -> None:
-        aid = id(M)
-        if aid not in self._arrays:
-            self._arrays[aid] = (M, L, set())
-        self._arrays.move_to_end(aid)
-        old = self._entries.get(key)
-        if old is not None and old[0] != aid:
-            arr = self._arrays.get(old[0])
-            if arr is not None:
-                arr[2].discard(key)
-        self._arrays[aid][2].add(key)
-        self._entries[key] = (aid, i)
-        while len(self._arrays) > self.max_arrays:
-            _, (_, _, keys) = self._arrays.popitem(last=False)
-            for k in keys:
-                self._entries.pop(k, None)
-            self.evictions += 1
-
-    def __contains__(self, key):
-        return key in self._entries
-
-    def __len__(self):
-        return len(self._entries)
+# The block-storage layer (host segment cache + launch-granularity device
+# pools behind one LRU core) lives in core/blockstore.py; the old private
+# names stay importable for external code that grew around them.
+_SegmentCache = SegmentCache
+_DevBlockPool = DevBlockPool
 
 
 @dataclasses.dataclass
@@ -396,6 +347,8 @@ class RelationEngine(StatsHost):
         async_dispatch: bool = True,
         inflight_max: int = 8,
         dev_pool_segments: int = 256,
+        shards: int = 1,
+        shard_plan: Optional[ShardPlan] = None,
     ):
         if pre.tables is None:
             raise ValueError("precondition(..., build_tables=True) required")
@@ -414,40 +367,85 @@ class RelationEngine(StatsHost):
         if deg:
             self.deg.update(deg)
 
+        # Segment shards over the ("data",) device mesh (docs/DESIGN.md §9):
+        # shard k owns the contiguous segment range plan.shard_bounds(k),
+        # produces exactly those blocks on plan.devices[k], and retains them
+        # in its own device pool. shards=1 (the default) is the unsharded
+        # engine, bit-for-bit.
+        ns = self.smesh.n_segments
+        if shard_plan is None:
+            shard_plan = ShardPlan.make(ns, shards)
+        elif shard_plan.n_segments != ns:
+            raise ValueError(
+                f"shard_plan covers {shard_plan.n_segments} segments but the "
+                f"mesh has {ns}")
+        self.shard_plan = shard_plan
+        self.n_shards = shard_plan.n_shards
+        # commit arrays to shard devices only when shards actually sit on
+        # distinct devices; logical sharding on one device stays placement-
+        # free (so tier-1 single-device runs are byte-identical to shards=1)
+        self._multi_dev = shard_plan.multi_device
+        self._seg_shard = shard_plan.shard_of_array(np.arange(ns))
+
         # Multi-queue: one pending-request queue per offloaded relation
         # (paper §4.5 'Justification of design choices').
         self.queues: Dict[str, List[int]] = {r: [] for r in self.relations}
-        self.cache = _SegmentCache(cache_segments)
+        # Block storage (core/blockstore.py): one host segment cache + one
+        # device block pool PER SHARD (docs/DESIGN.md §5/§9). Pool entries
+        # reference retained launch arrays (idx row) or one-block uploads
+        # (idx None); each pool is bounded by backing launches —
+        # ``dev_pool_segments`` is a per-device segment budget converted at
+        # launch granularity, so the device-memory bound is honest even
+        # though one entry can pin a whole ``batch_max``-segment launch.
+        # Evictions only drop device references; the host cache keeps the
+        # data.
+        self.store = BlockStore(
+            cache_segments,
+            max(1, dev_pool_segments // max(1, batch_max)),
+            n_shards=self.n_shards,
+            shard_of=lambda s: int(self._seg_shard[s]))
+        self.cache = self.store.cache
+        self._dev_pool = self.store   # shard-routed DevBlockPool surface
         # In-flight futures: (relation, segment) -> _Launch whose device
         # arrays may still be computing. Launches retire into the cache at
         # the first read that needs them (or opportunistically when ready).
         self._inflight: Dict[Tuple[str, int], _Launch] = {}
         self._flights: "collections.deque[_Launch]" = collections.deque()
-        # Device block pool (docs/DESIGN.md §5): still-device-resident full
-        # (M, L) blocks for the completion gather path. Entries reference
-        # retained launch arrays (idx row) or one-block uploads (idx None);
-        # the pool is bounded by backing launches — ``dev_pool_segments``
-        # is a segment budget converted at launch granularity, so the
-        # device-memory bound is honest even though one entry can pin a
-        # whole ``batch_max``-segment launch. Evictions only drop device
-        # references; the host cache keeps the data.
-        self._dev_pool = _DevBlockPool(
-            max(1, dev_pool_segments // max(1, batch_max)))
-        self._init_stats()   # stats + per-worker breakdown + engine lock
+        self._init_stats()   # stats + per-worker/per-shard breakdown + lock
 
         # Device-resident stacked tables (copied once, like the paper copying
-        # initialized arrays to GPU global memory).
+        # initialized arrays to GPU global memory). Sharded engines slice the
+        # stacked tables per shard — each device holds only its own
+        # segments' rows, indexed by shard-local segment id (docs §9).
         t = self.tables
-        self._dev: Dict[str, jnp.ndarray] = {}
-        self._dev["T_local"] = jnp.asarray(t.T_local)
-        self._dev["LT_global"] = jnp.asarray(t.LT_global)
-        self._dev["LV_global"] = jnp.asarray(t.LV_global)
-        if t.E_local is not None:
-            self._dev["E_local"] = jnp.asarray(t.E_local)
-            self._dev["LE_global"] = jnp.asarray(t.LE_global)
-        if t.F_local is not None:
-            self._dev["F_local"] = jnp.asarray(t.F_local)
-            self._dev["LF_global"] = jnp.asarray(t.LF_global)
+        self._shard_tables: List[Dict[str, jnp.ndarray]] = []
+        for k in range(self.n_shards):
+            lo, hi = shard_plan.shard_bounds(k)
+            dev = shard_plan.devices[k] if self._multi_dev else None
+            if dev is not None:
+                put = (lambda a, d=dev, lo=lo, hi=hi:
+                       jax.device_put(np.ascontiguousarray(a[lo:hi]), d))
+            else:
+                put = (lambda a, lo=lo, hi=hi: jnp.asarray(a[lo:hi]))
+            tabs: Dict[str, jnp.ndarray] = {}
+            tabs["T_local"] = put(t.T_local)
+            tabs["LT_global"] = put(t.LT_global)
+            tabs["LV_global"] = put(t.LV_global)
+            if t.E_local is not None:
+                tabs["E_local"] = put(t.E_local)
+                tabs["LE_global"] = put(t.LE_global)
+            if t.F_local is not None:
+                tabs["F_local"] = put(t.F_local)
+                tabs["LF_global"] = put(t.LF_global)
+            self._shard_tables.append(tabs)
+        # legacy single-device view: with one shard the full tables double as
+        # shard 0's slice (same arrays); sharded engines keep only the
+        # inverse maps here
+        self._dev: Dict[str, jnp.ndarray] = (
+            dict(self._shard_tables[0]) if self.n_shards == 1 else {})
+        # per-(kind, shard) inverse-map replicas, staged lazily on first
+        # sharded resolve (dev_inverse(kind, shard=k))
+        self._inv_shard: Dict[Tuple[str, int], tuple] = {}
         # Device-resident inverse maps (docs/DESIGN.md §5): per-kind sorted
         # (segment, gid) appearance lists mirroring tables.inverse, stored as
         # i32 (seg, gid, row) columns so accelerator-side gathers can resolve
@@ -591,6 +589,18 @@ class RelationEngine(StatsHost):
             perm[np.asarray(outs)] = at + np.arange(len(idx))
             at += len(idx)
         perm[S:] = perm[0]     # padding repeats the first block
+        if len(groups) > 1 and self._multi_dev:
+            # a batch spanning shard boundaries mixes devices: normalize all
+            # parts onto one (lowest-id) device before concatenating — pure
+            # data movement, values unchanged
+            devs = {}
+            for p in parts_M:
+                d = next(iter(p.devices()))
+                devs[d.id] = d
+            if len(devs) > 1:
+                tgt = devs[min(devs)]
+                parts_M = [jax.device_put(p, tgt) for p in parts_M]
+                parts_L = [jax.device_put(p, tgt) for p in parts_L]
         pool_M = parts_M[0] if len(parts_M) == 1 else jnp.concatenate(parts_M)
         pool_L = parts_L[0] if len(parts_L) == 1 else jnp.concatenate(parts_L)
         if len(groups) > 1 or pad_to != S or np.any(perm[:S] != np.arange(S)):
@@ -606,6 +616,7 @@ class RelationEngine(StatsHost):
         self._bump(requests=1)
         self._count(relation, segment)
         key = (relation, segment)
+        shard = int(self._seg_shard[segment])
         ent = self._dev_pool.get(key)
         if ent is None:
             launch = self._inflight.get(key)
@@ -619,11 +630,20 @@ class RelationEngine(StatsHost):
             # device pool — re-check before paying a host->device upload
             ent = self._dev_pool.get(key)
             if ent is None:
-                ent = (jnp.asarray(Mh), jnp.asarray(Lh), None)
+                # uploads land on the segment's owning shard device, so the
+                # per-shard pool really bounds that device's memory
+                if self._multi_dev:
+                    d = self.shard_plan.devices[shard]
+                    ent = (jax.device_put(Mh, d), jax.device_put(Lh, d),
+                           None)
+                else:
+                    ent = (jnp.asarray(Mh), jnp.asarray(Lh), None)
                 self._dev_pool.put(key, *ent)
                 self._bump(devpool_uploads=1)
+                self._bump_shard(shard, devpool_uploads=1)
                 return ent
         self._bump(devpool_hits=1)
+        self._bump_shard(shard, devpool_hits=1)
         return ent
 
     def get_full_dev_many(self, relations: Sequence[str],
@@ -724,17 +744,34 @@ class RelationEngine(StatsHost):
                              n_rows=n_rows, gid=gid, gid_dev=gid_dev,
                              M=M, L=L)
 
-    def dev_inverse(self, kind: str):
+    def dev_inverse(self, kind: str, shard: Optional[int] = None):
         """Device inverse-map columns for simplex kind ``E``/``F``/``T``:
         ``(inv_seg, inv_gid, inv_row, inv_key_or_None, n_global)``.
         ``inv_key`` is only staged when the combined ``seg * n_global + gid``
         key fits i32 (the ``jnp.searchsorted`` oracle); the split columns
-        always support the lexicographic binary search."""
+        always support the lexicographic binary search.
+
+        With ``shard=k`` on a multi-device plan the columns are replicated
+        to shard k's device (staged lazily, once per (kind, shard)) so the
+        per-shard completion resolve runs without cross-device traffic
+        (docs/DESIGN.md §9); the maps are global either way — resolving a
+        neighbour row in *any* segment is exactly what the exchange step
+        needs."""
         if kind not in self._inv_nglob:
             raise KeyError(f"no device inverse map for kind {kind!r}")
-        return (self._dev[f"inv_seg_{kind}"], self._dev[f"inv_gid_{kind}"],
+        base = (self._dev[f"inv_seg_{kind}"], self._dev[f"inv_gid_{kind}"],
                 self._dev[f"inv_row_{kind}"],
                 self._dev.get(f"inv_key_{kind}"), self._inv_nglob[kind])
+        if shard is None or not self._multi_dev:
+            return base
+        key = (kind, int(shard))
+        cached = self._inv_shard.get(key)
+        if cached is None:
+            d = self.shard_plan.devices[shard]
+            cached = tuple(jax.device_put(a, d) if a is not None else None
+                           for a in base[:4]) + (base[4],)
+            self._inv_shard[key] = cached
+        return cached
 
     def get_batch(self, relation: str, segments: Sequence[int]):
         """Fetch several segments' (M, L) blocks as a list.
@@ -954,15 +991,19 @@ class RelationEngine(StatsHost):
         De-dups against the cache, the in-flight table AND the relation's
         pending queue: a queued segment must not also enter a launch as
         lookahead — it stays queued, so its eventual pop dispatches it once
-        instead of burning a ``_drain`` budget slot on a stale entry."""
-        ns = self.smesh.n_segments
+        instead of burning a ``_drain`` budget slot on a stale entry.
+
+        Lookahead never crosses a shard boundary (``hi`` is the owning
+        shard's end): launches are shard-pure, so a shard only ever produces
+        its own segments (docs/DESIGN.md §9)."""
+        hi = self.shard_plan.bounds[int(self._seg_shard[batch[0]]) + 1]
         out: List[int] = []
         seen = set(batch)
         queued = set(self.queues[relation])
         for s in batch:
             for d in range(1, self.lookahead + 1):
                 n = s + d
-                if (n < ns and n not in seen and n not in queued
+                if (n < hi and n not in seen and n not in queued
                         and (relation, n) not in self.cache
                         and (relation, n) not in self._inflight):
                     seen.add(n)
@@ -973,16 +1014,32 @@ class RelationEngine(StatsHost):
         """Drain the queue for ``relation`` (up to ``batch_max``), add
         lookahead, and dispatch one batched kernel. Never blocks when
         ``async_dispatch`` is on: the returned launch holds device-array
-        futures registered in the in-flight table."""
+        futures registered in the in-flight table.
+
+        Launches are shard-pure: the first popped segment fixes the shard,
+        queued segments of other shards stay queued (front, original order)
+        for a later dispatch, and the kernel reads the shard's OWN sliced
+        tables at shard-local indices — on a multi-device plan the whole
+        launch therefore runs and lands on the owning shard's device
+        (docs/DESIGN.md §9)."""
         t0 = time.perf_counter()
         q = self.queues[relation]
         batch: List[int] = []
+        shard = -1
+        deferred: List[int] = []
         while q and len(batch) < self.batch_max:
             s = q.pop(0)
             # stale entry: produced since it was queued
             if (relation, s) in self.cache or (relation, s) in self._inflight:
                 continue
+            if shard < 0:
+                shard = int(self._seg_shard[s])
+            elif int(self._seg_shard[s]) != shard:
+                deferred.append(s)
+                continue
             batch.append(s)
+        if deferred:
+            q[0:0] = deferred
         if not batch:
             self._bump(t_prepare=time.perf_counter() - t0)
             return None
@@ -998,27 +1055,32 @@ class RelationEngine(StatsHost):
         # segment) so jit sees O(log batch_max) shapes, not one per drain
         b_pad = ops.bucket_rows(len(batch))
         padded = batch + [batch[-1]] * (b_pad - len(batch))
-        segs = jnp.asarray(np.asarray(padded, dtype=np.int32))
+        lo = self.shard_plan.bounds[shard]
+        segs = jnp.asarray(np.asarray(padded, dtype=np.int32) - lo)
 
         kx, ky = RELATION_TABLES[relation]
         deg = self.deg[relation]
         nvl = self.tables.NV
+        tabs = self._shard_tables[shard]
         if relation == "VV":
-            tabX = jnp.take(self._dev["T_local"], segs, axis=0)
+            tabX = jnp.take(tabs["T_local"], segs, axis=0)
             tabY = tabX
-            colg = jnp.take(self._dev["LV_global"], segs, axis=0)
+            colg = jnp.take(tabs["LV_global"], segs, axis=0)
         else:
-            tabX = self._table_dev(kx, segs)
-            tabY = self._table_dev(ky, segs)
-            colg = jnp.take(self._dev[_GLOBAL_NAME[ky]], segs, axis=0)
+            tabX = self._table_dev(kx, segs, tabs)
+            tabY = self._table_dev(ky, segs, tabs)
+            colg = jnp.take(tabs[_GLOBAL_NAME[ky]], segs, axis=0)
         self._bump(t_prepare=time.perf_counter() - t0)
 
         t1 = time.perf_counter()
         M, L = ops.relation_block(
             relation, tabX, tabY, colg, nvl, deg=deg, backend=self.backend,
             block_x=self.block_x, block_y=self.block_y)
-        self._bump(t_kernel=time.perf_counter() - t1, kernel_launches=1,
+        dt = time.perf_counter() - t1
+        self._bump(t_kernel=dt, kernel_launches=1,
                    segments_produced=len(batch))
+        self._bump_shard(shard, t_kernel=dt, kernel_launches=1,
+                         segments_produced=len(batch))
 
         n_int, _ = self.tables.counts(kx if relation != "VV" else "V")
         launch = _Launch(relation, batch, M, L,
@@ -1038,15 +1100,18 @@ class RelationEngine(StatsHost):
                 self._sync(self._flights.popleft())
         return launch
 
-    def _table_dev(self, kind: str, segs: jnp.ndarray) -> jnp.ndarray:
+    def _table_dev(self, kind: str, segs: jnp.ndarray,
+                   tabs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Stacked per-segment table for ``kind`` from one shard's sliced
+        tables (``segs`` are shard-local indices)."""
         if kind == "V":
             # virtual vertex table: tab[v] = (v,) with -1 past n_loc
-            lv = jnp.take(self._dev["LV_global"], segs, axis=0)  # (B, NV)
+            lv = jnp.take(tabs["LV_global"], segs, axis=0)  # (B, NV)
             iota = jnp.arange(self.tables.NV, dtype=jnp.int32)
             tab = jnp.where(lv >= 0, iota[None, :], -1)
             return tab[..., None]
         name = {"E": "E_local", "F": "F_local", "T": "T_local"}[kind]
-        return jnp.take(self._dev[name], segs, axis=0)
+        return jnp.take(tabs[name], segs, axis=0)
 
     # -- boundary relations (consumer-side, no accelerator — paper §4.4) ----
 

@@ -43,14 +43,67 @@ from typing import Callable, List, Optional, Sequence
 _PENDING = object()   # slot sentinel: batch not finished yet
 
 
-def partition(n_items: int, workers: int) -> List[List[int]]:
+def partition(n_items: int, workers: int,
+              shard_of: Optional[Callable[[int], int]] = None
+              ) -> List[List[int]]:
     """Strided assignment of ``n_items`` batch indices to at most
     ``workers`` workers (never more workers than items; each share is in
-    ascending order)."""
+    ascending order).
+
+    ``shard_of`` composes workers with segment shards (docs/DESIGN.md §9):
+    when given, each worker's share stays *within* shards as much as
+    possible, so a worker drives one shard's device pipeline instead of
+    ping-ponging its prefetch window across devices. With W workers and K
+    shards: W <= K assigns shards round-robin to workers (worker w owns
+    shards w, w+W, ...); W > K spreads the workers over the shards
+    (worker w serves shard w mod K) and strides within each shard. Either
+    way the shares are disjoint, cover every index, and are ascending —
+    the deterministic in-order reduce (and thus bit-identity) is untouched.
+    """
     if n_items <= 0:
         return []
     w = max(1, min(int(workers), n_items))
-    return [list(range(k, n_items, w)) for k in range(w)]
+    if shard_of is None or w == 1:
+        return [list(range(k, n_items, w)) for k in range(w)]
+    shards = [int(shard_of(i)) for i in range(n_items)]
+    uniq = sorted(set(shards))
+    K = len(uniq)
+    rank = {s: j for j, s in enumerate(uniq)}
+    if w <= K:
+        shares = [[i for i in range(n_items) if rank[shards[i]] % w == j]
+                  for j in range(w)]
+    else:
+        per = [0] * K                 # workers serving each shard
+        for j in range(w):
+            per[j % K] += 1
+        shares = []
+        for j in range(w):
+            s, r = j % K, j // K
+            own = [i for i in range(n_items) if rank[shards[i]] == s]
+            shares.append(own[r::per[s]])
+    return [sh for sh in shares if sh]
+
+
+def segment_batches(n_segments: int, batch_segments: int,
+                    plan=None) -> List[List[int]]:
+    """The drivers' contiguous segment-batch stream.
+
+    Without a plan this is the plain ``[b0, b0+batch_segments)`` chop the
+    serial drivers always used. With a :class:`~repro.distributed.sharding.
+    ShardPlan` the chop restarts at every shard boundary, so each consumer
+    batch (and the shard-pure launches its prefetch triggers) stays on one
+    shard's device. Per-row driver results are independent of batch
+    boundaries, so this re-chunking preserves bit-identity (DESIGN.md §9).
+    """
+    if plan is None or plan.n_shards <= 1:
+        bounds = ((0, n_segments),)
+    else:
+        bounds = tuple(zip(plan.bounds[:-1], plan.bounds[1:]))
+    batches = []
+    for lo, hi in bounds:
+        for b0 in range(lo, hi, batch_segments):
+            batches.append(list(range(b0, min(b0 + batch_segments, hi))))
+    return batches
 
 
 def _worker_scope(ds, name: str):
@@ -71,6 +124,7 @@ def run_partitioned(
     prefetch: Optional[Callable] = None,
     scope=None,
     name: str = "consumer",
+    shard_of: Optional[Callable[[int], int]] = None,
 ) -> None:
     """Run ``consume(i, items[i])`` over every item with ``workers`` CPU
     threads and reduce the results deterministically.
@@ -91,7 +145,9 @@ def run_partitioned(
     thread in ascending item order — the deterministic reduction that makes
     the output independent of worker count and interleaving. ``scope`` is
     the data structure whose ``worker_scope`` attributes stats to workers
-    (``w0``, ``w1``, ...).
+    (``w0``, ``w1``, ...). ``shard_of`` (item index -> segment shard) makes
+    the partition shard-affine (see :func:`partition`) for sharded engines;
+    it never changes the reduce order, only which worker serves which item.
 
     Error contract: the first worker exception (lowest item index) is
     re-raised here after all workers stopped; remaining workers abort at
@@ -100,7 +156,7 @@ def run_partitioned(
     n = len(items)
     if n == 0:
         return
-    shares = partition(n, workers)
+    shares = partition(n, workers, shard_of)
 
     if len(shares) == 1 and workers <= 1:
         # inline serial pipeline (no threads): identical order of

@@ -106,6 +106,11 @@ DATASETS = {
     "hole":     lambda: structured_grid(
         22, 22, 22, cell_mask_fn=sphere_hole_mask((11, 11, 11), 6.0)),
     "stent":    lambda: structured_grid(28, 28, 20),
+    # long thin bar: Morton-ordered segments stack along x, so a contiguous
+    # ShardPlan cuts the bar crosswise and every shard boundary is a planar
+    # wall of faces whose second cofacet lives on the neighbouring shard —
+    # the shard-exchange stress case (docs/DESIGN.md §9, sharded tests)
+    "bar":      lambda: structured_grid(48, 4, 4),
 }
 
 

@@ -19,14 +19,137 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Optional, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..launch.mesh import shard_map_compat
+from ..launch.mesh import make_mesh, shard_map_compat
+
+
+# ===========================================================================
+# Segment sharding for the relation engine (DESIGN.md §9)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Contiguous segment shards over the ``("data",)`` device mesh.
+
+    Shard ``k`` owns segments ``[bounds[k], bounds[k+1])`` and produces +
+    retains exactly those blocks on ``devices[k]``.  Contiguity matters:
+    Morton-ordered segments make each shard a spatially compact region, so
+    cross-shard completion traffic concentrates on shard-boundary faces
+    (the partition-owned-storage idiom of data-parallel unstructured
+    rendering).  ``devices`` may repeat (more shards than devices — the
+    plan is then purely logical and no arrays are committed)."""
+
+    n_segments: int
+    bounds: Tuple[int, ...]          # len n_shards + 1; [0] == 0, [-1] == ns
+    devices: Tuple[Any, ...]         # one device per shard (None = default)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.bounds) - 1
+
+    @property
+    def multi_device(self) -> bool:
+        """True when every shard sits on its own distinct device (the
+        collective-exchange path is only meaningful then)."""
+        devs = [d for d in self.devices if d is not None]
+        return (len(devs) == self.n_shards > 1
+                and len({d.id for d in devs}) == self.n_shards)
+
+    def shard_of(self, segment: int) -> int:
+        return int(np.searchsorted(np.asarray(self.bounds[1:]),
+                                   int(segment), side="right"))
+
+    def shard_of_array(self, segments) -> np.ndarray:
+        return np.searchsorted(np.asarray(self.bounds[1:]),
+                               np.asarray(segments), side="right")
+
+    def shard_bounds(self, shard: int) -> Tuple[int, int]:
+        return self.bounds[shard], self.bounds[shard + 1]
+
+    def segments(self, shard: int) -> range:
+        return range(self.bounds[shard], self.bounds[shard + 1])
+
+    @staticmethod
+    def make(n_segments: int, shards: int = 1,
+             devices: Optional[Sequence[Any]] = None) -> "ShardPlan":
+        """Even contiguous split of ``n_segments`` into ``shards`` shards,
+        devices round-robin over ``jax.devices()`` (shards=1 stays off the
+        device API entirely: the unsharded engine must not force backend
+        initialisation or placement)."""
+        n_segments = int(n_segments)
+        shards = max(1, min(int(shards), max(1, n_segments)))
+        base, rem = divmod(n_segments, shards)
+        bounds = [0]
+        for k in range(shards):
+            bounds.append(bounds[-1] + base + (1 if k < rem else 0))
+        if devices is None:
+            if shards == 1:
+                devices = (None,)
+            else:
+                devs = jax.devices()
+                devices = tuple(devs[k % len(devs)] for k in range(shards))
+        return ShardPlan(n_segments, tuple(bounds), tuple(devices))
+
+
+def make_data_mesh(n_shards: int):
+    """The ``("data",)`` mesh for the sharded relation engine — built via
+    the launch/mesh.py shims only (JAX 0.4.x pin)."""
+    return make_mesh((int(n_shards),), ("data",))
+
+
+def all_sum_shards(parts: List[Tuple[Any, Any]],
+                   devices: Optional[Sequence[Any]] = None):
+    """Integer sum of per-shard ``(cand, cand_len)`` contributions.
+
+    Each completion pair has exactly one owning shard; the owner contributes
+    the gathered pool rows, every other shard exact zeros, so an elementwise
+    integer sum reconstructs the single-pool candidate matrix bit-for-bit
+    (DESIGN.md §9).  With one distinct device per part the sum runs as a
+    ``psum`` over the ``("data",)`` mesh via :func:`shard_map_compat`;
+    otherwise (shards sharing a device, e.g. tier-1 on one CPU device) it
+    falls back to stack+sum on one device — identical integers either way.
+    """
+    if len(parts) == 1:
+        return parts[0]
+    cands = [p[0] for p in parts]
+    lens = [p[1] for p in parts]
+    n = len(parts)
+    dev_ids = ({d.id for d in devices if d is not None}
+               if devices is not None else set())
+    if devices is not None and len(dev_ids) == n:
+        mesh = make_mesh((n,), ("data",))
+        mesh_devs = list(mesh.devices.flat)
+        spec = P("data")
+        c_parts = [jax.device_put(c[None], mesh_devs[k])
+                   for k, c in enumerate(cands)]
+        l_parts = [jax.device_put(l[None], mesh_devs[k])
+                   for k, l in enumerate(lens)]
+        gc = jax.make_array_from_single_device_arrays(
+            (n,) + cands[0].shape, NamedSharding(mesh, spec), c_parts)
+        gl = jax.make_array_from_single_device_arrays(
+            (n,) + lens[0].shape, NamedSharding(mesh, spec), l_parts)
+        f = shard_map_compat(
+            lambda c, l: (jax.lax.psum(c, "data"), jax.lax.psum(l, "data")),
+            mesh=mesh, in_specs=(spec, spec), out_specs=(P(), P()))
+        sc, sl = f(gc, gl)
+        return sc[0], sl[0]
+    tgt = None
+    if devices is not None:
+        for d in devices:
+            if d is not None:
+                tgt = d
+                break
+    if tgt is not None:
+        cands = [jax.device_put(c, tgt) for c in cands]
+        lens = [jax.device_put(l, tgt) for l in lens]
+    return (jnp.sum(jnp.stack(cands), axis=0),
+            jnp.sum(jnp.stack(lens), axis=0))
 
 
 @dataclasses.dataclass
@@ -35,6 +158,9 @@ class Runtime:
     a no-op (single-device smoke tests)."""
 
     mesh: Optional[Mesh] = None
+    # segment-shard assignment for the relation engine (DESIGN.md §9);
+    # None = unsharded
+    shard_plan: Optional[ShardPlan] = None
     batch_axes: Tuple[str, ...] = ("data",)
     fsdp_axis: Optional[str] = "data"
     tp_axis: Optional[str] = "model"

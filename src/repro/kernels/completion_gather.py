@@ -134,6 +134,52 @@ def _union_jit(cand, cand_len, pair_gid, pair_at, deg_out):
     return _union_impl(cand, cand_len, pair_gid, pair_at, deg_out)
 
 
+# -- per-shard gather (the sharded exchange's local half) --------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_global",))
+def _gather_candidates_xla(pool_M, pool_L, inv_seg, inv_gid, inv_row,
+                           inv_key, pair_slot, pair_seg, pair_gid, n_global):
+    S, R, degp = pool_M.shape
+    if inv_key is not None:
+        rows = _resolve_key(inv_key, inv_row, pair_seg, pair_gid, n_global)
+    else:
+        rows = _resolve_lex(inv_seg, inv_gid, inv_row, pair_seg, pair_gid)
+    ok = (pair_slot >= 0) & (rows >= 0)
+    flat = jnp.clip(pair_slot, 0) * R + jnp.clip(rows, 0, R - 1)
+    cand = pool_M.reshape(S * R, degp)[flat]
+    # non-owned pairs contribute EXACT zeros (both values and length) so an
+    # integer sum across shards reconstructs the single-pool gather
+    # bit-for-bit — each pair has exactly one owning shard
+    cand = jnp.where(ok[:, None], cand, 0)
+    cand_len = jnp.where(ok, pool_L.reshape(S * R)[flat], 0)
+    return cand, cand_len
+
+
+def gather_candidates(pool_M, pool_L, inv_seg, inv_gid, inv_row,
+                      pair_slot, pair_seg, pair_gid,
+                      inv_key=None, n_global: int = 0):
+    """One shard's half of the sharded completion gather (DESIGN.md §9):
+    resolve ``(segment, gid)`` pairs against the global inverse maps and
+    gather candidate rows from THIS shard's block pool, with pairs the
+    shard does not own (``pair_slot == -1``) masked to exact zeros.
+
+    The returned ``(cand (P, degp), cand_len (P,))`` are summed elementwise
+    across shards (``distributed.sharding.all_sum_shards``) and fed to
+    :func:`union_pairs` — together bit-identical to :func:`gather_union`
+    over one combined pool."""
+    return _gather_candidates_xla(pool_M, pool_L, inv_seg, inv_gid, inv_row,
+                                  inv_key, pair_slot, pair_seg, pair_gid,
+                                  int(n_global))
+
+
+def union_pairs(cand, cand_len, pair_gid, pair_at, deg_out: int):
+    """The shared union / self-removal / dedup / compaction epilogue over an
+    explicit candidate matrix — the second half of the sharded exchange.
+    Returns ``(M, L, raw, kept)`` exactly like :func:`gather_union`."""
+    return _union_jit(cand, cand_len, pair_gid, pair_at, deg_out)
+
+
 # -- xla backend: one fused dispatch -----------------------------------------
 
 

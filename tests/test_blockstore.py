@@ -1,0 +1,139 @@
+"""BlockStore layer: the shared LRU core, launch-granularity pinning in the
+device pool, and shard routing (docs/DESIGN.md §6/§9)."""
+
+import numpy as np
+
+from repro.core.blockstore import (BlockStore, DevBlockPool, SegmentCache,
+                                   _LRUCore)
+
+
+def _arr(n=4, fill=0):
+    return np.full((n, 2), fill, np.int32)
+
+
+class TestLRUCore:
+    def test_eviction_order_is_least_recent_first(self):
+        c = _LRUCore(3)
+        for k in "abc":
+            c.put(k, k.upper())
+        c.get("a")                       # a becomes most-recent
+        ev = c.put("d", "D")             # b is now least-recent
+        assert ev == [("b", "B")]
+        ev = c.put("e", "E")
+        assert ev == [("c", "C")]
+        assert list(c._store) == ["a", "d", "e"]
+        assert c.evictions == 2
+
+    def test_put_existing_key_retouches_without_eviction(self):
+        c = _LRUCore(2)
+        c.put("a", 1)
+        c.put("b", 2)
+        assert c.put("a", 3) == []       # re-put: no growth, a most-recent
+        assert c.put("c", 4) == [("b", 2)]
+        assert c.get("a") == 3
+
+    def test_capacity_floor_is_one(self):
+        c = _LRUCore(0)
+        assert c.capacity == 1
+        c.put("a", 1)
+        assert c.put("b", 2) == [("a", 1)]
+
+
+class TestSegmentCache:
+    def test_lru_and_store_backcompat(self):
+        sc = SegmentCache(2)
+        sc.put(("VV", 0), ("M0", "L0", 4))
+        sc.put(("VV", 1), ("M1", "L1", 4))
+        sc.get(("VV", 0))
+        sc.put(("VV", 2), ("M2", "L2", 4))   # evicts ("VV", 1)
+        assert ("VV", 1) not in sc
+        assert ("VV", 0) in sc and ("VV", 2) in sc
+        assert sc.evictions == 1
+        # benchmarks peek at / clear the backing OrderedDict directly
+        assert set(sc._store) == {("VV", 0), ("VV", 2)}
+        sc._store.clear()
+        assert len(sc) == 0
+
+
+class TestDevBlockPool:
+    def test_launch_granularity_pin(self):
+        """Touching ANY entry of a launch pins the whole backing array; the
+        LRU evicts whole launches, dropping every segment they carried."""
+        pool = DevBlockPool(2)
+        A, B, C = _arr(fill=1), _arr(fill=2), _arr(fill=3)
+        LA, LB, LC = _arr(1), _arr(1), _arr(1)
+        # launch A carries segments 0 and 1; launch B carries segment 2
+        pool.put(("VV", 0), A, LA, 0)
+        pool.put(("VV", 1), A, LA, 1)
+        pool.put(("VV", 2), B, LB, 0)
+        assert len(pool) == 3
+        pool.get(("VV", 0))              # pins launch A as most-recent
+        pool.put(("VV", 3), C, LC, 0)    # evicts launch B (least-recent)
+        assert ("VV", 2) not in pool
+        assert ("VV", 0) in pool and ("VV", 1) in pool and ("VV", 3) in pool
+        assert pool.evictions == 1
+
+    def test_evicting_a_launch_drops_all_its_entries(self):
+        pool = DevBlockPool(1)
+        A, B = _arr(fill=1), _arr(fill=2)
+        pool.put(("VV", 0), A, A, 0)
+        pool.put(("VV", 1), A, A, 1)
+        pool.put(("VV", 2), B, B, 0)     # evicts A -> both entries gone
+        assert len(pool) == 1
+        assert pool.get(("VV", 0)) is None and pool.get(("VV", 1)) is None
+        M, L, idx = pool.get(("VV", 2))
+        assert M is B and idx == 0
+
+    def test_rekeying_to_new_backing_discards_old_membership(self):
+        """Re-producing a segment into a new launch must unregister it from
+        the old backing array, so evicting the old launch later cannot drop
+        the fresh entry."""
+        pool = DevBlockPool(2)
+        A, B, C = _arr(fill=1), _arr(fill=2), _arr(fill=3)
+        pool.put(("VV", 0), A, A, 0)
+        pool.put(("VV", 0), B, B, 0)     # re-keyed to launch B
+        pool.get(("VV", 0))              # pin B
+        pool.put(("VV", 9), C, C, 0)     # evicts A
+        M, _, _ = pool.get(("VV", 0))
+        assert M is B
+        assert pool.evictions == 1
+
+
+class TestBlockStore:
+    def test_single_shard_degenerates_to_one_pool(self):
+        st = BlockStore(cache_segments=4, pool_arrays=2)
+        A = _arr()
+        st.put(("VV", 5), A, A, 0)
+        assert ("VV", 5) in st
+        assert len(st.pools) == 1
+        assert st._arrays is st.pools[0]._arrays
+
+    def test_shard_routing_and_merged_views(self):
+        st = BlockStore(cache_segments=4, pool_arrays=2, n_shards=2,
+                        shard_of=lambda s: 0 if s < 8 else 1)
+        A, B = _arr(fill=1), _arr(fill=2)
+        st.put(("VV", 3), A, A, 0)       # shard 0
+        st.put(("VV", 9), B, B, 0)       # shard 1
+        assert len(st.pools[0]) == 1 and len(st.pools[1]) == 1
+        M, _, _ = st.get(("VV", 9))
+        assert M is B
+        assert len(st) == 2
+        assert set(st._arrays) == {id(A), id(B)}
+        occ = st.shard_occupancy()
+        assert [o["entries"] for o in occ] == [1, 1]
+        assert all(o["bytes"] > 0 for o in occ)
+
+    def test_per_shard_eviction_bounds_and_evictions_sum(self):
+        """dev_pool bounds hold PER SHARD: filling shard 0 never evicts
+        shard 1's blocks."""
+        st = BlockStore(cache_segments=4, pool_arrays=1, n_shards=2,
+                        shard_of=lambda s: 0 if s < 8 else 1)
+        keep = _arr(fill=7)
+        st.put(("VV", 9), keep, keep, 0)           # shard 1
+        for seg in range(4):                       # churn shard 0's pool
+            A = _arr(fill=seg)
+            st.put(("VV", seg), A, A, 0)
+        assert ("VV", 9) in st                     # untouched by shard 0
+        assert st.pools[0].evictions == 3
+        assert st.pools[1].evictions == 0
+        assert st.evictions == 3
