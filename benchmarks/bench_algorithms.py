@@ -1,4 +1,5 @@
-"""Paper Figs. 7/8/9: total time + memory of the three TDA algorithms with
+"""Paper Figs. 7/8/9: total time + memory of the four TDA algorithms
+(critical points, discrete gradient, Morse-Smale, persistence pairing) with
 {GALE, ACTOPO, TopoCluster, Explicit Triangulation} across datasets.
 
 The GALE engine is benchmarked through BOTH consumer arms (docs/DESIGN.md
@@ -28,12 +29,14 @@ from typing import Dict, List, Optional
 from repro.algorithms.critical_points import critical_points
 from repro.algorithms.discrete_gradient import discrete_gradient
 from repro.algorithms.morse_smale import morse_smale
+from repro.algorithms.persistence import persistence_pairs
 
 from . import common
 
 CP_RELS = ("VV", "VT")                       # paper: 2 queues
 DG_RELS = ("VE", "VF", "VT")                 # paper: 3 queues
 MS_RELS = ("VE", "VF", "VT", "FT", "TT")     # + FT/TT for separatrices
+PD_RELS = MS_RELS                            # persistence: same 5 queues
 # (engine-backed morse_smale assembles ascending successors from completed
 # TT adjacency; the other structures take the FT-gather path — bit-identical)
 
@@ -60,6 +63,11 @@ def _run_algo(algo: str, ds, pre, rank, kind: str):
         g = discrete_gradient(ds, pre, rank, batch_segments=16,
                               consumer=consumer, co_prefetch=co)
         return morse_smale(ds, pre, g, consumer=consumer)
+    if algo == "persistence":
+        co = ("TT", "FT") if consumer == "device" else ()
+        g = discrete_gradient(ds, pre, rank, batch_segments=16,
+                              consumer=consumer, co_prefetch=co)
+        return persistence_pairs(ds, pre, rank, grad=g, consumer=consumer)
     raise KeyError(algo)
 
 
@@ -138,8 +146,9 @@ def bench(algo: str, relations, datasets, structures=STRUCTURES,
 def _signature(algo, out):
     if algo == "critical_points":
         return tuple(sorted(out[1].items()))
-    if algo == "discrete_gradient":
-        return tuple(sorted(out.counts().items()))
+    if algo == "persistence":
+        # full bit-identity across structures/arms, not just counts
+        return out.digest()
     return tuple(sorted(out.counts().items()))
 
 
@@ -181,6 +190,8 @@ def run(quick: bool = True, datasets=None) -> List[str]:
     rows += bench("discrete_gradient", DG_RELS, data, structs,
                   records=records)
     rows += bench("morse_smale", MS_RELS,
+                  data[:2] if quick else data, structs, records=records)
+    rows += bench("persistence", PD_RELS,
                   data[:2] if quick else data, structs, records=records)
     rows += _interp_guard(records)
 

@@ -1,0 +1,153 @@
+"""Persistence A/B: the union-find pairing arm against its two oracles
+(docs/DESIGN.md §10).
+
+Per adversarial dataset ("graded", "slivers", "tunnel", "pockets",
+"archipelago" — the PR-7 families with closed-form topology) the suite
+times both pairing arms on the engine and emits machine-checkable rows:
+
+  - ``persistence/<ds>/pairing``        union-find merge forest (the fast
+                                        arm simplification consumes)
+  - ``persistence/<ds>/reduction``      matrix-reduction oracle, with
+                                        ``oracle_ok=True`` iff the two
+                                        diagrams are bit-identical
+  - ``persistence/<ds>/dev_vs_host``    device vs host consumer arm, with
+                                        ``identical=`` digest equality
+  - ``persistence/closed_form``         off-diagonal 0-dim pairs ==
+                                        ``fields.profile_diagram0`` on a
+                                        slab-field bar (exact, not approx)
+  - ``persistence/simplify``            survivor-invariant check after a
+                                        median-persistence cancellation
+
+CI's ``persistence-smoke`` job greps ``oracle_ok=True`` / ``identical=True``
+and fails on any ``False``. ``run()`` writes ``BENCH_persistence.json``
+(override with ``$BENCH_PERSISTENCE_JSON``) as the uploaded artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from repro.algorithms import fields
+from repro.algorithms.critical_points import total_order
+from repro.algorithms.discrete_gradient import discrete_gradient
+from repro.algorithms.morse_smale import morse_smale
+from repro.algorithms.persistence import persistence_pairs, simplify_ms
+from repro.core.mesh import segment_mesh
+from repro.core.segtables import precondition
+from repro.data.meshgen import structured_grid
+
+from . import common
+
+PD_RELS = ("VE", "VF", "VT", "FT", "TT")
+DATASETS = ("graded", "slivers", "tunnel", "pockets", "archipelago")
+QUICK = ("graded", "tunnel", "pockets")
+
+
+def _ab(name: str, records: List[Dict]) -> List[str]:
+    sm, pre, rank, _ = common.prepare(name, PD_RELS, capacity=64)
+    eng = common.make_ds("gale", pre, PD_RELS)
+    # warm run compiles the jits; the timed runs measure the pipelines
+    persistence_pairs(eng, pre, rank)
+    t_pair, d_pair = common.timed(persistence_pairs, eng, pre, rank,
+                                  method="pairing")
+    t_red, d_red = common.timed(persistence_pairs, eng, pre, rank,
+                                method="reduction")
+    t_host, d_host = common.timed(persistence_pairs, eng, pre, rank,
+                                  consumer="host")
+    oracle_ok = d_pair.digest() == d_red.digest()
+    ident = d_pair.digest() == d_host.digest()
+    c = d_pair.counts()
+    rows = [
+        common.row(f"persistence/{name}/pairing", t_pair,
+                   f"pairs0={c['pairs0']};pairs2={c['pairs2']};"
+                   f"essential0={c['essential0']}"),
+        common.row(f"persistence/{name}/reduction", t_red,
+                   f"speedup={t_red / t_pair if t_pair > 0 else 0:.2f};"
+                   f"oracle_ok={oracle_ok}"),
+        common.row(f"persistence/{name}/dev_vs_host", t_pair,
+                   f"host_s={t_host:.3f};identical={ident}"),
+    ]
+    records.append({
+        "dataset": name, "t_pairing": t_pair, "t_reduction": t_red,
+        "t_host": t_host, "counts": c, "oracle_ok": oracle_ok,
+        "identical": ident, "digest": d_pair.digest(),
+    })
+    return rows
+
+
+def _closed_form(records: List[Dict]) -> List[str]:
+    """Exact conformance against the 1-D profile oracle on a slab field."""
+    xs = np.linspace(0.0, 24.0, 7)
+    ys = [9.0, 1.0, 6.0, 0.0, 8.0, 2.0, 10.0]
+    mesh = structured_grid(25, 5, 5,
+                           scalar_fn=fields.axis_profile(xs, ys))
+    sm = segment_mesh(mesh, capacity=48)
+    pre = precondition(sm, relations=list(PD_RELS))
+    rank = total_order(sm.scalars)
+    eng = common.make_ds("gale", pre, PD_RELS)
+    t, d = common.timed(persistence_pairs, eng, pre, rank)
+    x = sm.points[:, 0].astype(np.float64)
+    _, first = np.unique(x, return_index=True)
+    opairs, oess = fields.profile_diagram0(
+        sm.scalars.astype(np.float64)[first])
+    m = d.deaths0 > d.births0
+    got = np.stack([d.births0[m], d.deaths0[m]], axis=1)
+    got = got[np.lexsort((got[:, 0], got[:, 1]))]
+    om = opairs[:, 1] > opairs[:, 0]
+    ok = (got.shape == opairs[om].shape
+          and np.allclose(got, opairs[om])
+          and len(d.essential0) == len(oess))
+    records.append({"dataset": "bar_wells", "closed_form_ok": bool(ok),
+                    "oracle_ok": bool(ok), "identical": True,
+                    "t_pairing": t})
+    return [common.row("persistence/closed_form", t,
+                       f"pairs={int(m.sum())};oracle_ok={ok}")]
+
+
+def _simplify(records: List[Dict]) -> List[str]:
+    """Median-persistence cancellation preserves the survivor invariant."""
+    sm, pre, rank, _ = common.prepare("fish", PD_RELS, capacity=64)
+    eng = common.make_ds("gale", pre, PD_RELS)
+    grad = discrete_gradient(eng, pre, rank)
+    ms = morse_smale(eng, pre, grad)
+    diag = persistence_pairs(eng, pre, rank, grad=grad)
+    pers = diag.persistence0()
+    thr = float(np.median(pers)) if len(pers) else 0.0
+    t, (simp, rep) = common.timed(simplify_ms, ms, diag, thr)
+    keep = set(diag.pairs0[pers >= thr, 0].tolist()) \
+        | set(diag.essential0.tolist())
+    ok = set(np.unique(simp.dest_min).tolist()) == keep \
+        and rep["minima_after"] == len(keep)
+    records.append({"dataset": "fish", "simplify_ok": bool(ok),
+                    "oracle_ok": bool(ok), "identical": True,
+                    "threshold": thr, "report": rep, "t_simplify": t})
+    return [common.row("persistence/simplify", t,
+                       f"thr={thr:.3f};cancelled={rep['cancelled0']};"
+                       f"minima_after={rep['minima_after']};oracle_ok={ok}")]
+
+
+def run(quick: bool = True, datasets=None) -> List[str]:
+    data = datasets or (QUICK if quick else DATASETS)
+    rows: List[str] = []
+    records: List[Dict] = []
+    for name in data:
+        rows += _ab(name, records)
+    rows += _closed_form(records)
+    rows += _simplify(records)
+    all_ok = all(r.get("oracle_ok") and r.get("identical", True)
+                 for r in records)
+    rows.append(common.row("persistence/ab_total",
+                           sum(r.get("t_pairing", 0.0) for r in records),
+                           f"datasets={len(records)};oracle_ok={all_ok}"))
+    path = os.environ.get(
+        "BENCH_PERSISTENCE_JSON",
+        os.path.join(os.path.dirname(__file__), "..",
+                     "BENCH_persistence.json"))
+    with open(path, "w") as fh:
+        json.dump({"suite": "persistence", "quick": quick,
+                   "records": records}, fh, indent=1)
+    return rows

@@ -29,7 +29,8 @@ def main() -> None:
                     help="full dataset pool (slower)")
     ap.add_argument("--only", default="",
                     help="comma list: algorithms,scalability,waiting,"
-                         "kernel_params,memory_scaling,adjacency")
+                         "kernel_params,memory_scaling,adjacency,"
+                         "persistence")
     ap.add_argument("--datasets", default="",
                     help="comma list restricting the algorithms suite's "
                          "dataset pool (e.g. --datasets engine)")
@@ -43,7 +44,8 @@ def main() -> None:
 
     from benchmarks import (bench_adjacency, bench_algorithms,
                             bench_kernel_params, bench_memory_scaling,
-                            bench_scalability, bench_waiting)
+                            bench_persistence, bench_scalability,
+                            bench_waiting)
 
     suites = {
         "algorithms": bench_algorithms,     # paper Figs. 7/8/9
@@ -52,6 +54,7 @@ def main() -> None:
         "kernel_params": bench_kernel_params,  # paper Appendix A
         "memory_scaling": bench_memory_scaling,  # Figs. 7-9 memory bars
         "adjacency": bench_adjacency,       # batched vs scalar completion
+        "persistence": bench_persistence,   # pairing vs reduction A/B
     }
     print("name,us_per_call,derived")
     for name, mod in suites.items():

@@ -1,4 +1,4 @@
-"""Full TDA pipeline (the paper's three algorithms) on one dataset, with a
+"""Full TDA pipeline (the paper's four algorithms) on one dataset, with a
 GALE vs Explicit-Triangulation comparison — results must be identical.
 
 Both structures run the device-resident consumer pipeline
@@ -11,8 +11,11 @@ the scheduler (docs/DESIGN.md §8); results are bit-identical for any N.
 per shard when the platform has them, docs/DESIGN.md §9); the drivers
 follow the engine's plan automatically and results stay bit-identical.
 
+``--simplify T`` additionally cancels every persistence pair below
+threshold T and reports the simplified Morse-Smale complex.
+
   PYTHONPATH=src python examples/analyze_mesh.py [dataset] [--workers N]
-                                                 [--shards K]
+                                                 [--shards K] [--simplify T]
 """
 
 import argparse
@@ -22,6 +25,7 @@ from repro.algorithms import fields
 from repro.algorithms.critical_points import critical_points, total_order
 from repro.algorithms.discrete_gradient import discrete_gradient
 from repro.algorithms.morse_smale import morse_smale
+from repro.algorithms.persistence import persistence_pairs, simplify_ms
 from repro.core.engine import RelationEngine
 from repro.core.explicit import ExplicitTriangulation
 from repro.core.mesh import segment_mesh
@@ -38,6 +42,9 @@ def main():
                     help="consumer threads per driver (DESIGN.md §8)")
     ap.add_argument("--shards", type=int, default=1,
                     help="segment shards on the GALE engine (DESIGN.md §9)")
+    ap.add_argument("--simplify", type=float, default=None, metavar="T",
+                    help="cancel persistence pairs below threshold T and "
+                         "report the simplified MS complex (DESIGN.md §10)")
     args = ap.parse_args()
     name, workers = args.dataset, args.workers
     mesh = load_dataset(name, scalar_fn=fields.gaussians(2, k=5, sigma=5.0))
@@ -61,11 +68,25 @@ def main():
         g = discrete_gradient(ds, pre, rank, batch_segments=16,
                               co_prefetch=("TT",), workers=workers)
         ms = morse_smale(ds, pre, g, workers=workers)
+        diag = persistence_pairs(ds, pre, rank, grad=g, workers=workers)
         dt = time.perf_counter() - t0
         assert g.euler() == chi, "Morse-Euler identity violated!"
         s = ds.stats
         print(f"[{label:9s}] {dt:6.2f}s  critical={cp}  "
               f"gradient={g.counts()}  ms={ms.counts()}")
+        pd = diag.counts()
+        pers = diag.persistence0()
+        print(f"            persistence: {pd['pairs0']} dim-0 pairs "
+              f"(max pers {pers.max() if len(pers) else 0:.3f}), "
+              f"{pd['pairs2']} dim-2 pairs, "
+              f"{pd['essential0']} essential component(s)  "
+              f"digest={diag.digest()[:12]}")
+        if args.simplify is not None:
+            simp, rep = simplify_ms(ms, diag, args.simplify)
+            print(f"            simplified @ {args.simplify:g}: "
+                  f"cancelled {rep['cancelled0']}+{rep['cancelled2']} pairs, "
+                  f"minima {rep['minima_before']}->{rep['minima_after']}, "
+                  f"maxima {rep['maxima_before']}->{rep['maxima_after']}")
         print(f"            consumer: {s.requests} block reads = "
               f"{s.devpool_hits} device-pool hits + "
               f"{s.devpool_uploads} uploads "

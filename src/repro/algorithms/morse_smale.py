@@ -41,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.adjacency import complete_adjacency
-from ..core.scheduler import run_partitioned, segment_batches
+from ..core.scheduler import run_collect, run_partitioned, segment_batches
 from . import consume
 from .discrete_gradient import GradientField
 
@@ -119,34 +119,70 @@ def _gather_ft(ds, pre, batch_segments: int = 16,
 
 
 def _cofacet_rows(ds, pre, face_ids, batch_segments: int = 16,
-                  mode: str = "host") -> np.ndarray:
-    """FT rows (m, 2) for specific faces only: one batched engine request per
-    set of owner segments instead of a whole-mesh gather. The device arm
-    reads the owner blocks through :meth:`get_full_dev_many` and downloads
-    only the selected ``(m, 2)`` rows."""
+                  mode: str = "host", workers: int = 1,
+                  plan=None) -> np.ndarray:
+    """FT rows (m, 2) for specific faces only: the owner segments are
+    streamed in pipelined batches through the consumer scheduler
+    (:func:`run_collect`) instead of one monolithic request — each worker
+    prefetches its next owner batch before consuming the current one, and
+    batches restart at shard boundaries with shard-affine workers. The
+    device arm reads the owner blocks through :meth:`get_full_dev_many` and
+    downloads only the selected ``(m, 2)`` rows; results are bit-identical
+    for any batch size, worker count, or shard plan (rows are keyed by face
+    gid, not by batch)."""
     face_ids = np.asarray(face_ids, dtype=np.int64)
     out = np.full((len(face_ids), 2), -1, dtype=np.int64)
     if len(face_ids) == 0:
         return out
     segs = pre.owner_segment("F", face_ids)
-    uniq = [int(s) for s in np.unique(segs)]
+    uniq = np.unique(segs)
+    sh = (plan.shard_of_array(uniq) if plan is not None
+          else np.zeros(len(uniq), np.int64))
+    batches, cur = [], [int(uniq[0])]
+    for a in range(1, len(uniq)):
+        if len(cur) >= batch_segments or sh[a] != sh[a - 1]:
+            batches.append(cur)
+            cur = []
+        cur.append(int(uniq[a]))
+    batches.append(cur)
+    shard_of = ((lambda i: plan.shard_of(batches[i][0]))
+                if plan is not None else None)
+    prefetch = ((lambda sl: ds.prefetch("FT", sl))
+                if hasattr(ds, "prefetch") else None)
+
     if mode == "device":
-        cb = ds.get_full_dev_many(("FT",), uniq, cols={"FT": 2})
-        # batch rows are ascending internal gids of the (sorted) owner
-        # segments, so each face resolves by one binary search
-        pos = np.searchsorted(cb.gid, face_ids)
-        rows = np.asarray(jnp.take(cb.M["FT"],
-                                   jnp.asarray(pos.astype(np.int32)), axis=0))
+        def consume_batch(i, sl):
+            sel = np.nonzero(np.isin(segs, sl))[0]
+            cb = ds.get_full_dev_many(("FT",), sl, cols={"FT": 2})
+            # batch rows are ascending internal gids of the (sorted) owner
+            # segments, so each face resolves by one binary search
+            pos = np.searchsorted(cb.gid, face_ids[sel])
+            rows = jnp.take(cb.M["FT"], jnp.asarray(pos.astype(np.int32)),
+                            axis=0)
+            return sel, rows
+
+        def finalize(inter):
+            sel, rows = inter
+            return sel, np.asarray(rows)
+    else:
+        finalize = None
+
+        def consume_batch(i, sl):
+            sel = np.nonzero(np.isin(segs, sl))[0]
+            rows = np.full((len(sel), 2), -1, np.int64)
+            for s, (M, L) in zip(sl, ds.get_batch("FT", sl)):
+                m = segs[sel] == s
+                r = face_ids[sel][m] - int(pre.I_F[s])
+                w = min(2, M.shape[1])
+                rows[m, :w] = M[r][:, :w]
+            return sel, rows
+
+    for sel, rows in run_collect(batches, consume_batch, workers=workers,
+                                 finalize=finalize, prefetch=prefetch,
+                                 scope=ds, name="cofacet_rows",
+                                 shard_of=shard_of):
         w = min(2, rows.shape[1])
-        out[:, :w] = rows[:, :w]
-        return out
-    if hasattr(ds, "prefetch"):
-        ds.prefetch("FT", uniq)
-    for s, (M, L) in zip(uniq, ds.get_batch("FT", uniq)):
-        sel = segs == s
-        rows = face_ids[sel] - int(pre.I_F[s])
-        w = min(2, M.shape[1])
-        out[sel, :w] = M[rows][:, :w]
+        out[sel, :w] = rows[:, :w]
     return out
 
 
@@ -253,7 +289,8 @@ def morse_smale(ds, pre, grad: GradientField,
         succ_t = _ascending_successors_tt(ds, pre, grad,
                                           batch=64 * batch_segments,
                                           mode=mode, workers=workers)
-        cof_s2 = _cofacet_rows(ds, pre, s2, batch_segments, mode=mode)
+        cof_s2 = _cofacet_rows(ds, pre, s2, batch_segments, mode=mode,
+                               workers=workers, plan=plan)
     else:
         ft = _gather_ft(ds, pre, batch_segments, workers=workers, plan=plan)
         f = grad.pair_t2f                  # (nt,) face this tet is paired to

@@ -106,6 +106,34 @@ def segment_batches(n_segments: int, batch_segments: int,
     return batches
 
 
+def run_collect(
+    items: Sequence,
+    consume: Callable,
+    *,
+    workers: int = 1,
+    finalize: Optional[Callable] = None,
+    prefetch: Optional[Callable] = None,
+    scope=None,
+    name: str = "collect",
+    shard_of: Optional[Callable[[int], int]] = None,
+) -> List:
+    """:func:`run_partitioned` with the common list-building reduce: returns
+    ``[result(items[0]), result(items[1]), ...]`` in item order. The
+    deterministic in-order reduction makes the list independent of worker
+    count and interleaving; drivers whose per-item results are rows keyed by
+    the item (the persistence driver's targeted cofacet reads) concatenate
+    the list instead of hand-rolling an indexed scatter."""
+    out: List = [None] * len(items)
+
+    def reduce(i, res):
+        out[i] = res
+
+    run_partitioned(items, consume, reduce, workers=workers,
+                    finalize=finalize, prefetch=prefetch, scope=scope,
+                    name=name, shard_of=shard_of)
+    return out
+
+
 def _worker_scope(ds, name: str):
     """The stat-attribution scope for one worker: ``ds.worker_scope`` when
     the data structure keeps per-worker stats (engine / explicit baseline),

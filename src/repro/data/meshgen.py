@@ -94,6 +94,119 @@ def sphere_hole_mask(center, radius):
     return fn
 
 
+def cylinder_hole_mask(center2d, radius, axis=2):
+    """Cell mask drilling a through-hole along ``axis``: the removed cells
+    form a cylinder spanning the full extent, so the remaining solid is a
+    handlebody with one tunnel (β₁ += 1) instead of a cavity (β₂ += 1)."""
+    c = np.asarray(center2d, dtype=np.float64)
+    keep_axes = [a for a in range(3) if a != axis]
+
+    def fn(centers):
+        d = centers[:, keep_axes] - c[None, :]
+        return np.sqrt((d * d).sum(axis=1)) > radius
+    return fn
+
+
+def graded_grid(
+    nx: int, ny: int, nz: int,
+    ratio: float = 4.0, axis: int = 0,
+    scalar_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+    cell_mask_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+) -> TetMesh:
+    """AMR-like geometric grading: the Kuhn topology of ``structured_grid``
+    with vertex coordinates along ``axis`` remapped by an exponential so
+    consecutive cell widths shrink geometrically — the last cell is
+    ``ratio`` times wider than the first. The map is strictly monotone, so
+    no tet is inverted or degenerate, but segment spatial densities vary by
+    ``ratio`` across the mesh (the refinement-region stress case for the
+    Morton segmentation and the device block pool)."""
+    if ratio <= 0:
+        raise ValueError(f"ratio must be positive, got {ratio}")
+    mesh = structured_grid(nx, ny, nz, cell_mask_fn=cell_mask_fn)
+    n = (nx, ny, nz)[axis]
+    span = float(n - 1)
+    t = mesh.points[:, axis].astype(np.float64) / span
+    if abs(ratio - 1.0) > 1e-12:
+        warped = span * (np.power(ratio, t) - 1.0) / (ratio - 1.0)
+    else:
+        warped = span * t
+    mesh.points[:, axis] = warped.astype(np.float32)
+    if scalar_fn is not None:
+        mesh.scalars = np.asarray(scalar_fn(mesh.points), np.float32)
+    return mesh
+
+
+def anisotropic_grid(
+    nx: int, ny: int, nz: int,
+    aspect=(1.0, 1.0, 0.1), shear: float = 0.0,
+    scalar_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+    cell_mask_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+) -> TetMesh:
+    """Sliver-heavy anisotropic tets: the structured grid scaled per axis by
+    ``aspect`` (a small component flattens every Kuhn tet into a sliver)
+    plus an optional x-by-z ``shear``. The map is linear with determinant
+    ``prod(aspect) != 0``, so volumes shrink but never vanish or flip —
+    adversarial geometry with unchanged (analytically known) topology."""
+    a = np.asarray(aspect, dtype=np.float64)
+    if (a <= 0).any():
+        raise ValueError(f"aspect components must be positive, got {aspect}")
+    mesh = structured_grid(nx, ny, nz, cell_mask_fn=cell_mask_fn)
+    pts = mesh.points.astype(np.float64) * a[None, :]
+    pts[:, 0] += shear * pts[:, 2]
+    mesh.points = pts.astype(np.float32)
+    if scalar_fn is not None:
+        mesh.scalars = np.asarray(scalar_fn(mesh.points), np.float32)
+    return mesh
+
+
+def component_stride(nx: int, gap: float = 3.0) -> float:
+    """x-distance between copies of a :func:`multi_component` mesh — the
+    value field constructors (``fields.per_component``) need to recover the
+    component index from a point's x coordinate."""
+    return float(nx - 1) + float(gap)
+
+
+def multi_component(
+    k: int, nx: int, ny: int, nz: int,
+    gap: float = 3.0, hole: Optional[str] = None,
+    scalar_fn: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+) -> TetMesh:
+    """``k`` disjoint translated copies of a grid along x, each optionally
+    carrying a hole — the multi-component family with closed-form Betti
+    numbers. Per copy: ``hole=None`` is a solid box (β = 1,0,0),
+    ``"cavity"`` removes an interior ball (β = 1,0,1 — an enclosed void),
+    ``"tunnel"`` drills a cylinder through z (β = 1,1,0 — a handle). Totals
+    are k-fold sums, so χ = V - E + F - T = k·(1 - β₁ + β₂) is an analytic
+    invariant the property suite checks per family."""
+    if k < 1:
+        raise ValueError(f"need k >= 1 components, got {k}")
+    if hole not in (None, "cavity", "tunnel"):
+        raise ValueError(f"hole must be None/'cavity'/'tunnel', got {hole!r}")
+    mask = None
+    if hole == "cavity":
+        # strictly interior ball: never touches the outer boundary
+        c = ((nx - 1) / 2, (ny - 1) / 2, (nz - 1) / 2)
+        mask = sphere_hole_mask(c, max(1.1, min(nx, ny, nz) / 4))
+    elif hole == "tunnel":
+        c = ((nx - 1) / 2, (ny - 1) / 2)
+        mask = cylinder_hole_mask(c, max(1.1, min(nx, ny) / 4), axis=2)
+    stride = component_stride(nx, gap)
+    pts, tets, off = [], [], 0
+    for j in range(k):
+        m = structured_grid(nx, ny, nz, cell_mask_fn=mask)
+        p = m.points.copy()
+        p[:, 0] += j * stride
+        pts.append(p)
+        tets.append(m.tets + off)
+        off += len(p)
+    points = np.concatenate(pts, axis=0)
+    tetarr = np.concatenate(tets, axis=0)
+    scal = (scalar_fn(points) if scalar_fn is not None
+            else np.zeros(len(points)))
+    return TetMesh(points=points, tets=tetarr,
+                   scalars=np.asarray(scal, np.float32))
+
+
 # Named dataset pool mirroring the paper's table-2 spirit at container scale.
 DATASETS = {
     "toy":      lambda: two_tets(),
@@ -111,6 +224,17 @@ DATASETS = {
     # wall of faces whose second cofacet lives on the neighbouring shard —
     # the shard-exchange stress case (docs/DESIGN.md §9, sharded tests)
     "bar":      lambda: structured_grid(48, 4, 4),
+    # adversarial families with analytically known topology (PR 7): the
+    # persistence oracle tests and the property suite pin their Betti
+    # numbers / Euler characteristics / profile-field diagrams in closed
+    # form (docs/DESIGN.md §10)
+    "graded":      lambda: graded_grid(24, 8, 8, ratio=8.0),
+    "slivers":     lambda: anisotropic_grid(14, 12, 10,
+                                            aspect=(1.0, 1.0, 0.08),
+                                            shear=0.35),
+    "tunnel":      lambda: multi_component(1, 10, 10, 8, hole="tunnel"),
+    "pockets":     lambda: multi_component(2, 8, 8, 8, hole="cavity"),
+    "archipelago": lambda: multi_component(3, 7, 6, 6),
 }
 
 

@@ -1,0 +1,75 @@
+"""Hypothesis facade for the property suites.
+
+When ``hypothesis`` is installed (CI: ``requirements-dev.txt`` +
+``REQUIRE_HYPOTHESIS=1``) this re-exports the real ``given`` / ``settings``
+/ ``strategies``; the derandomized "ci" profile lives in ``conftest.py``.
+
+Without it (lean dev containers where installing is not an option) a
+deterministic fallback with the same decorator surface runs each property
+over ``max_examples`` draws from a per-test seeded RNG — every run draws
+the same examples, so the suite hard-passes locally instead of skipping
+and the tier-1 count carries no environment-dependent skip. Under
+``REQUIRE_HYPOTHESIS=1`` a missing install is still a hard failure:
+the fallback must never mask a broken CI environment.
+"""
+
+import os
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only in lean containers
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        raise
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def sample(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    st = _Strategies()
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._ht_max_examples = int(max_examples)
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # deliberately NOT functools.wraps: pytest must see a zero-arg
+            # test, not the strategy parameters (it would hunt fixtures)
+            def runner():
+                n = getattr(runner, "_ht_max_examples", 10)
+                # stable per-test seed: same examples every run, any order
+                seed = zlib.crc32(fn.__qualname__.encode("utf-8"))
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng)
+                             for k, s in sorted(strategies.items())}
+                    fn(**drawn)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco

@@ -1,0 +1,299 @@
+"""Oracle conformance of the persistence driver (docs/DESIGN.md §10):
+
+  - union-find pairing == matrix-reduction arm BIT-FOR-BIT (equal digests)
+    on every adversarial mesh family,
+  - 0-dim diagrams == the closed-form 1-D profile oracle
+    (``fields.profile_diagram0``) for slab fields, off-diagonal exactly,
+  - essential class counts == closed-form Betti numbers, Morse
+    inequalities and the Euler identity against ``critical_points`` /
+    ``discrete_gradient`` counts, on every family x backend,
+  - device/host consumer arms, engine vs explicit baseline, and any
+    workers x shards combination produce the identical diagram,
+  - ``simplify_ms`` enforces its survivor invariant and input contract.
+"""
+
+import numpy as np
+import pytest
+
+from repro.algorithms import fields
+from repro.algorithms.critical_points import critical_points, total_order
+from repro.algorithms.discrete_gradient import discrete_gradient
+from repro.algorithms.morse_smale import morse_smale
+from repro.algorithms.persistence import persistence_pairs, simplify_ms
+from repro.core.engine import RelationEngine
+from repro.core.explicit import ExplicitTriangulation
+from repro.core.mesh import segment_mesh
+from repro.core.segtables import precondition
+from repro.data.meshgen import (anisotropic_grid, component_stride,
+                                graded_grid, multi_component,
+                                structured_grid)
+
+# VV rides along for the critical_points cross-check
+RELS = ["VV", "VE", "VF", "VT", "FT", "TT"]
+
+# 7-point double-well profile: 3 minima (one essential), passes between
+_YS = [9.0, 1.0, 6.0, 0.0, 8.0, 2.0, 10.0]
+
+
+def _wells(extent, axis=0):
+    xs = np.linspace(0.0, float(extent), len(_YS))
+    return fields.axis_profile(xs, _YS, axis=axis)
+
+
+# name -> (mesh builder with slab field, slab axis, component x-stride or
+#          None, (beta0, beta1, beta2))
+FAMILIES = {
+    "bar_wells": (
+        lambda: structured_grid(25, 4, 4, scalar_fn=_wells(24)),
+        0, None, (1, 0, 0)),
+    "graded_wells": (
+        lambda: graded_grid(24, 6, 6, ratio=8.0, scalar_fn=_wells(23)),
+        0, None, (1, 0, 0)),
+    # shear couples x to z, so the slab field rides the untouched y axis
+    "sliver_wells": (
+        lambda: anisotropic_grid(8, 25, 6, aspect=(1.0, 1.0, 0.08),
+                                 shear=0.35, scalar_fn=_wells(24, axis=1)),
+        1, None, (1, 0, 0)),
+    # the tunnel runs along z: constant-z slabs are plane-minus-disk,
+    # still connected, so the profile rides the tunnel axis
+    "tunnel_wells": (
+        lambda: multi_component(1, 10, 10, 12, hole="tunnel",
+                                scalar_fn=_wells(11, axis=2)),
+        2, None, (1, 1, 0)),
+    "pocket_wells": (
+        lambda: multi_component(2, 9, 9, 9, hole="cavity",
+                                scalar_fn=_wells(2 * component_stride(9))),
+        0, component_stride(9), (2, 0, 2)),
+    "archipelago_wells": (
+        lambda: multi_component(3, 7, 6, 6,
+                                scalar_fn=_wells(3 * component_stride(7))),
+        0, component_stride(7), (3, 0, 0)),
+}
+
+
+@pytest.fixture(scope="module")
+def fam(request):
+    name = request.param
+    build, axis, stride, betti = FAMILIES[name]
+    mesh = build()
+    sm = segment_mesh(mesh, capacity=48)
+    pre = precondition(sm, relations=RELS)
+    rank = total_order(sm.scalars)
+    eng = RelationEngine(pre, RELS)
+    return name, sm, pre, rank, eng, axis, stride, betti
+
+
+def pytest_generate_tests(metafunc):
+    if "fam" in metafunc.fixturenames:
+        metafunc.parametrize("fam", sorted(FAMILIES), indirect=True)
+
+
+def _slab_oracle(sm, axis, stride):
+    """Closed-form 0-dim diagram of a slab field: the 1-D profile diagram
+    of the slab values, per connected component (grouped by x-stride for
+    multi-component meshes), diagrams unioned."""
+    x = sm.points[:, axis].astype(np.float64)
+    scal = sm.scalars.astype(np.float64)
+    if stride is None:
+        groups = [np.ones(len(x), bool)]
+    else:
+        j = np.floor(sm.points[:, 0].astype(np.float64) / stride
+                     + 0.5 / stride)
+        groups = [j == v for v in np.unique(j)]
+    pairs, ess = [], []
+    for g in groups:
+        idx = np.nonzero(g)[0]
+        _, first = np.unique(x[g], return_index=True)
+        p, e = fields.profile_diagram0(scal[idx[first]])
+        pairs.append(p)
+        ess.append(e)
+    pairs = np.concatenate(pairs, axis=0) if pairs else np.zeros((0, 2))
+    order = np.lexsort((pairs[:, 0], pairs[:, 1]))
+    return pairs[order], np.sort(np.concatenate(ess))
+
+
+def _off_diag(births, deaths):
+    m = deaths > births
+    got = np.stack([births[m], deaths[m]], axis=1)
+    return got[np.lexsort((got[:, 0], got[:, 1]))]
+
+
+def test_pairing_matches_reduction_oracle(fam):
+    """The union-find merge-forest arm and the independent matrix-reduction
+    arm produce the identical diagram, bit for bit."""
+    name, sm, pre, rank, eng, _, _, _ = fam
+    da = persistence_pairs(eng, pre, rank, method="pairing")
+    db = persistence_pairs(eng, pre, rank, method="reduction")
+    assert da.method == "pairing" and db.method == "reduction"
+    assert da.digest() == db.digest(), name
+    np.testing.assert_array_equal(da.pairs0, db.pairs0)
+    np.testing.assert_array_equal(da.pairs2, db.pairs2)
+    np.testing.assert_array_equal(da.essential0, db.essential0)
+    # ancestry is the pairing arm's extra: reduction leaves -1
+    assert (db.merge_into0 == -1).all()
+    if len(da.merge_into0):
+        assert (da.merge_into0 >= 0).all()
+
+
+def test_diagram_matches_closed_form(fam):
+    """0-dim persistence of a slab field == the 1-D profile diagram of the
+    slab values (off-diagonal exactly; discrete within-slab merges only
+    ever add zero-persistence points)."""
+    name, sm, pre, rank, eng, axis, stride, _ = fam
+    d = persistence_pairs(eng, pre, rank)
+    opairs, oess = _slab_oracle(sm, axis, stride)
+    got = _off_diag(d.births0, d.deaths0)
+    want = _off_diag(opairs[:, 0], opairs[:, 1])
+    np.testing.assert_allclose(got, want, err_msg=name)
+    np.testing.assert_allclose(
+        np.sort(sm.scalars[d.essential0].astype(np.float64)), oess,
+        err_msg=name)
+
+
+def test_betti_morse_inequalities_euler(fam):
+    """Analytic invariants per family: essential classes count the Betti
+    numbers, critical cells obey the Morse inequalities, the alternating
+    sum is the Euler characteristic — on the engine AND the explicit
+    baseline."""
+    name, sm, pre, rank, eng, _, _, betti = fam
+    b0, b1, b2 = betti
+    chi = sm.n_vertices - pre.n_edges + pre.n_faces - sm.n_tets
+    assert chi == b0 - b1 + b2, name   # mesh agrees with the closed form
+    for ds in (eng, ExplicitTriangulation(pre, RELS)):
+        grad = discrete_gradient(ds, pre, rank)
+        d = persistence_pairs(ds, pre, rank, grad=grad)
+        assert len(d.essential0) == b0
+        c0, c1, c2, c3 = (int(grad.crit_v.sum()), int(grad.crit_e.sum()),
+                          int(grad.crit_f.sum()), int(grad.crit_t.sum()))
+        assert c0 >= b0 and c1 >= b1 and c2 >= b2
+        assert c0 - c1 + c2 - c3 == chi
+        # every critical cell is accounted for: paired, essential, or a
+        # birth the driver leaves to the middle dimension
+        assert len(d.pairs0) + len(d.essential0) + \
+            len(d.unpaired1) - len(d.unpaired1) == c0  # pairs0+ess0 == c0
+        assert len(d.pairs0) + len(d.unpaired1) == c1
+        assert len(d.pairs2) + len(d.unpaired2) == c2
+        assert len(d.pairs2) + len(d.essential2) == c3
+        # Banchoff minima (no lower neighbour) == gradient minima
+        _, counts = critical_points(ds, pre, rank)
+        assert counts["minima"] == c0
+
+
+def test_consumer_arms_and_backends_identical(fam):
+    """Device arm, host arm, and the explicit baseline: same digest."""
+    name, sm, pre, rank, eng, _, _, _ = fam
+    base = persistence_pairs(eng, pre, rank).digest()
+    assert persistence_pairs(eng, pre, rank, consumer="host").digest() \
+        == base, name
+    ex = ExplicitTriangulation(pre, RELS)
+    assert persistence_pairs(ex, pre, rank).digest() == base, name
+
+
+def test_workers_and_shards_identical():
+    """Any workers x shards combination: the identical diagram digest (the
+    scheduler/sharding contract extended to the fourth driver)."""
+    build, _, _, _ = FAMILIES["pocket_wells"]
+    sm = segment_mesh(build(), capacity=32)
+    pre = precondition(sm, relations=RELS)
+    rank = total_order(sm.scalars)
+    digests = set()
+    for shards in (1, 2):
+        eng = RelationEngine(pre, RELS, shards=shards) if shards > 1 \
+            else RelationEngine(pre, RELS)
+        for workers in (1, 2, 4):
+            d = persistence_pairs(eng, pre, rank, workers=workers,
+                                  shards=shards if shards > 1 else None)
+            digests.add(d.digest())
+    assert len(digests) == 1
+    # mismatched shard count is rejected, not silently ignored
+    eng2 = RelationEngine(pre, RELS, shards=2)
+    with pytest.raises(ValueError):
+        persistence_pairs(eng2, pre, rank, shards=3)
+
+
+def test_adjacency_arms_identical():
+    """Completed-TT successors vs the FT-gather fallback: same digest."""
+    build, _, _, _ = FAMILIES["tunnel_wells"]
+    sm = segment_mesh(build(), capacity=48)
+    pre = precondition(sm, relations=RELS)
+    rank = total_order(sm.scalars)
+    eng = RelationEngine(pre, RELS)
+    assert persistence_pairs(eng, pre, rank, adjacency="tt").digest() \
+        == persistence_pairs(eng, pre, rank, adjacency="ft").digest()
+
+
+@pytest.fixture(scope="module")
+def bumpy():
+    mesh = structured_grid(12, 12, 10,
+                           scalar_fn=fields.gaussians(2, k=5, sigma=3.0,
+                                                      scale=12.0))
+    sm = segment_mesh(mesh, capacity=48)
+    pre = precondition(sm, relations=RELS)
+    rank = total_order(sm.scalars)
+    eng = RelationEngine(pre, RELS)
+    grad = discrete_gradient(eng, pre, rank)
+    ms = morse_smale(eng, pre, grad)
+    diag = persistence_pairs(eng, pre, rank, grad=grad)
+    return sm, pre, rank, eng, grad, ms, diag
+
+
+def test_simplify_survivor_invariant(bumpy):
+    """After cancelling below any threshold, the surviving minima are
+    exactly {pairs0 with persistence >= threshold} ∪ essential0, every
+    vertex maps to one of them, and each cancelled saddle's arcs are
+    dropped (dually for maxima, with boundary -1 preserved)."""
+    sm, pre, rank, eng, grad, ms, diag = bumpy
+    pers = diag.persistence0()
+    assert len(pers) >= 2, "field too simple to exercise cancellation"
+    for thr in (0.0, float(np.median(pers)), float(pers.max()) + 1.0):
+        simp, rep = simplify_ms(ms, diag, thr)
+        keep = set(diag.pairs0[pers >= thr, 0].tolist()) \
+            | set(diag.essential0.tolist())
+        assert set(np.unique(simp.dest_min).tolist()) == keep
+        assert rep["cancelled0"] == int((pers < thr).sum())
+        assert rep["minima_after"] == len(keep)
+        assert len(simp.saddle1_ends) \
+            == len(ms.saddle1_ends) - rep["cancelled0"]
+        # surviving arcs end at surviving minima
+        if len(simp.saddle1_ends):
+            assert set(simp.saddle1_ends[:, 1:].reshape(-1).tolist()) <= keep
+        keep2 = set(diag.pairs2[diag.persistence2() >= thr, 1].tolist()) \
+            | set(diag.essential2.tolist())
+        surv2 = set(np.unique(simp.dest_max).tolist()) - {-1}
+        assert surv2 <= keep2
+        assert len(simp.saddle2_ends) \
+            == len(ms.saddle2_ends) - rep["cancelled2"]
+    # threshold 0 cancels nothing: the complex is unchanged
+    simp0, _ = simplify_ms(ms, diag, 0.0)
+    np.testing.assert_array_equal(simp0.dest_min, ms.dest_min)
+    np.testing.assert_array_equal(simp0.dest_max, ms.dest_max)
+    np.testing.assert_array_equal(simp0.saddle1_ends, ms.saddle1_ends)
+    np.testing.assert_array_equal(simp0.saddle2_ends, ms.saddle2_ends)
+
+
+def test_simplify_requires_pairing_diagram(bumpy):
+    sm, pre, rank, eng, grad, ms, _ = bumpy
+    red = persistence_pairs(eng, pre, rank, grad=grad, method="reduction")
+    with pytest.raises(ValueError, match="pairing"):
+        simplify_ms(ms, red, 0.5)
+
+
+def test_method_validated(bumpy):
+    sm, pre, rank, eng, _, _, _ = bumpy
+    with pytest.raises(ValueError, match="method"):
+        persistence_pairs(eng, pre, rank, method="euler")
+
+
+def test_diagram_values_consistent(bumpy):
+    """Birth/death values come from the cells' lower-star vertices: births0
+    are the minima's own scalars, deaths0 >= births0 always, and dim-2
+    persistence is non-negative (max value >= its saddle face value)."""
+    sm, pre, rank, eng, grad, ms, diag = bumpy
+    np.testing.assert_array_equal(
+        diag.births0, sm.scalars[diag.pairs0[:, 0]].astype(np.float64))
+    assert (diag.deaths0 >= diag.births0).all()
+    assert (diag.persistence2() >= 0).all()
+    # counts() mirrors the arrays
+    c = diag.counts()
+    assert c["pairs0"] == len(diag.pairs0)
+    assert c["essential0"] == len(diag.essential0)

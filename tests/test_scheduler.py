@@ -24,7 +24,8 @@ from repro.algorithms.morse_smale import morse_smale
 from repro.core.engine import EngineStats, RelationEngine, RelationWidthError
 from repro.core.explicit import ExplicitTriangulation
 from repro.core.mesh import segment_mesh
-from repro.core.scheduler import partition, run_partitioned
+from repro.algorithms.persistence import persistence_pairs
+from repro.core.scheduler import partition, run_collect, run_partitioned
 from repro.core.segtables import precondition
 from repro.data.meshgen import structured_grid
 
@@ -117,6 +118,17 @@ def test_prefetch_depth1_double_buffer_per_worker():
         ("consume", 12), ("finalize", 11), ("finalize", 12)]
 
 
+@pytest.mark.parametrize("workers", [1, 3, 8])
+def test_run_collect_returns_items_in_order(workers):
+    """run_collect is run_partitioned with the list-building reduce: the
+    result list is in item order for any worker count, finalize applies."""
+    items = list(range(17))
+    out = run_collect(items, lambda i, x: x * x, workers=workers,
+                      finalize=lambda r: r + 1)
+    assert out == [x * x + 1 for x in items]
+    assert run_collect([], lambda i, x: x, workers=workers) == []
+
+
 # ---- driver bit-identity across worker counts -----------------------------
 
 def _run_all(ds, pre, rank, workers, consumer="auto"):
@@ -126,12 +138,14 @@ def _run_all(ds, pre, rank, workers, consumer="auto"):
                           consumer=consumer, workers=workers)
     ms = morse_smale(ds, pre, g, batch_segments=4, consumer=consumer,
                      workers=workers)
-    return t, cp, g, ms
+    pd = persistence_pairs(ds, pre, rank, grad=g, batch_segments=4,
+                           consumer=consumer, workers=workers)
+    return t, cp, g, ms, pd
 
 
 def _assert_identical(a, b):
-    ta, cpa, ga, msa = a
-    tb, cpb, gb, msb = b
+    ta, cpa, ga, msa, pda = a
+    tb, cpb, gb, msb, pdb = b
     np.testing.assert_array_equal(ta, tb)
     assert cpa == cpb
     for f in ("pair_v2e", "pair_e2f", "pair_f2t", "pair_e2v", "pair_f2e",
@@ -139,6 +153,7 @@ def _assert_identical(a, b):
         np.testing.assert_array_equal(getattr(ga, f), getattr(gb, f))
     for f in ("dest_min", "dest_max", "saddle1_ends", "saddle2_ends"):
         np.testing.assert_array_equal(getattr(msa, f), getattr(msb, f))
+    assert pda.digest() == pdb.digest()
 
 
 def test_drivers_bit_identical_across_workers_engine(setup):

@@ -19,6 +19,9 @@ import threading
 import numpy as np
 import pytest
 
+from repro.algorithms import fields
+from repro.algorithms.critical_points import total_order
+from repro.algorithms.persistence import persistence_pairs
 from repro.core.engine import RelationEngine
 from repro.core.mesh import segment_mesh
 from repro.core.segtables import precondition
@@ -199,4 +202,59 @@ def test_concurrent_fuzzed_interleavings(setup, seed):
     for f in ("requests", "cache_hits", "cache_misses", "inflight_hits",
               "kernel_launches", "segments_produced", "evictions",
               "devpool_hits", "devpool_uploads"):
+        assert getattr(merged, f) == getattr(s, f), f
+
+
+# ---- the persistence driver under fuzzed engine policies -------------------
+
+PD_RELS = ["VE", "VF", "VT", "FT", "TT"]
+
+
+@pytest.fixture(scope="module")
+def pd_setup():
+    mesh = structured_grid(7, 7, 6, jitter=0.15, seed=11,
+                           scalar_fn=fields.gaussians(4, k=4, sigma=2.5,
+                                                      scale=7.0))
+    sm = segment_mesh(mesh, capacity=24)
+    pre = precondition(sm, relations=PD_RELS)
+    rank = total_order(sm.scalars)
+    ref = RelationEngine(pre, PD_RELS, lookahead=0, batch_max=1,
+                         cache_segments=4096, async_dispatch=False)
+    digest = persistence_pairs(ref, pre, rank).digest()
+    return pre, rank, digest
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_persistence_driver_fuzzed_policies(pd_setup, seed):
+    """The fourth driver under random engine policies and worker counts:
+    the diagram digest equals the blocking-reference digest, production
+    stays duplicate-free, and the per-worker stats round-trip (the
+    any-scheduling contract extended to persistence)."""
+    pre, rank, ref_digest = pd_setup
+    rng = np.random.default_rng(500 + seed)
+    cap = int(rng.choice([2, 8, 4096]))           # incl. capacity < batch
+    batch_max = int(rng.choice([1, 4, 16]))
+    lookahead = int(rng.choice([0, 3, 8]))
+    workers = int(rng.choice([1, 2, 4]))
+    batch_segments = int(rng.choice([2, 5, 16]))
+    method = ("pairing", "reduction")[seed % 2]
+    eng = RelationEngine(pre, PD_RELS, cache_segments=cap,
+                         batch_max=batch_max, lookahead=lookahead)
+    launches = _record_launches(eng)
+    d = persistence_pairs(eng, pre, rank, method=method,
+                          batch_segments=batch_segments, workers=workers)
+    assert d.digest() == ref_digest
+
+    total = sum(len(segs) for _, segs in launches)
+    assert eng.stats.segments_produced == total
+    for _, segs in launches:
+        assert len(set(segs)) == len(segs)
+    if eng.cache.evictions == 0:
+        distinct = {(r, s) for r, segs in launches for s in segs}
+        assert eng.stats.segments_produced == len(distinct)
+    s = eng.stats
+    assert s.cache_hits + s.cache_misses == s.requests
+    merged = eng.merged_worker_stats()
+    for f in ("requests", "cache_hits", "cache_misses", "inflight_hits",
+              "kernel_launches", "segments_produced", "evictions"):
         assert getattr(merged, f) == getattr(s, f), f
