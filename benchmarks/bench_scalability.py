@@ -190,7 +190,7 @@ def run(quick: bool = True, shards: bool = False) -> List[str]:
                     base = rec
                     rows.append(common.row(
                         tag, t, f"algo_s={t:.3f};produced={produced};"
-                        f"baseline=True"))
+                        "baseline=True"))
                     records.append(rec)
                     continue
                 ident = sig == base["signature"]

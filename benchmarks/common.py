@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import resource
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Tuple
 
 import numpy as np
 

@@ -34,6 +34,7 @@ from . import consume
 REGULAR, MINIMUM, SADDLE1, SADDLE2, MAXIMUM, DEGENERATE = -1, 0, 1, 2, 3, 4
 
 
+# contract: device-resident
 @jax.jit
 def _boundary_mask(M: jnp.ndarray,      # (nt, deg) completed TT, -1 pad
                    T: jnp.ndarray,      # (nt, 4) global TV
@@ -114,6 +115,7 @@ def total_order(scalars: np.ndarray) -> np.ndarray:
     return rank
 
 
+# contract: device-resident
 @functools.partial(jax.jit, static_argnames=("deg_v", "deg_t"))
 def _classify_batch(
     vv_M: jnp.ndarray,    # (B, deg_v) neighbor global ids, -1 pad

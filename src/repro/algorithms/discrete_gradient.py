@@ -59,6 +59,7 @@ class GradientField:
         return c["crit_v"] - c["crit_e"] + c["crit_f"] - c["crit_t"]
 
 
+# contract: device-resident
 @functools.partial(jax.jit, static_argnames=("de", "df", "dt"))
 def _lower_star_batch(
     ve_M, vf_M, vt_M,            # (B, de/df/dt) coboundary gids, -1 pad

@@ -74,6 +74,7 @@ class MSComplex:
         }
 
 
+# contract: device-resident
 @jax.jit
 def _pointer_jump(succ: jnp.ndarray) -> jnp.ndarray:
     n = succ.shape[0]
@@ -186,6 +187,7 @@ def _cofacet_rows(ds, pre, face_ids, batch_segments: int = 16,
     return out
 
 
+# contract: device-resident
 @jax.jit
 def _across_successors(M: jnp.ndarray,   # (p, deg) completed TT, -1 pad
                        f: jnp.ndarray,   # (p,) paired face gid per tet

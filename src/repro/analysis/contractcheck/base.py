@@ -1,0 +1,230 @@
+"""Shared machinery for the contract checkers (docs/DESIGN.md §11).
+
+A checker is a small class with an ``id`` and a ``check(ctx, config)``
+method returning :class:`Violation` rows for one parsed module. The
+:class:`ModuleContext` hands every checker the same parsed view of a file:
+the ``ast`` tree, the ``# contract:`` annotations extracted from comment
+tokens (``tokenize`` sees comments; ``ast`` does not), and the module-level
+``# contract-scope:`` opt-in markers the fixture files use.
+
+Annotation syntax (recognised anywhere, attached to the line it sits on):
+
+``# contract: holds-lock``
+    The function may mutate lock-guarded state: its caller is responsible
+    for holding the engine lock (``self._cond``). Placed between the
+    ``def`` line and the first statement (or on the line above the def /
+    its first decorator).
+
+``# contract: device-resident``
+    The function is a device-resident consumer arm: no host conversion of
+    traced values (checked by the ``device-residency`` checker).
+
+``# contract: syncer-handoff``
+    Inline waiver on a blocking call that IS the sanctioned syncer handoff
+    path of docs/DESIGN.md §8 (the condvar wait, and the device wait the
+    syncer issues around an explicit release/re-acquire).
+
+``# contract-scope: lock`` / ``# contract-scope: shard``
+    Module-level opt-in: subject this file to the lock-discipline /
+    shard-purity module sets even though it is not one of the configured
+    core modules. The known-bad fixture files use these so each checker
+    can be proven live outside ``src/``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+_ANNOT_RE = re.compile(r"#\s*contract:\s*([a-z][a-z-]*)")
+_SCOPE_RE = re.compile(r"#\s*contract-scope:\s*([a-z][a-z-]*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One contract violation: where, which checker, what, and how to fix."""
+
+    path: str            # posix path as reported (relative when possible)
+    line: int            # 1-indexed
+    checker: str         # checker id, e.g. "lock-discipline"
+    message: str
+    hint: str = ""       # fix hint ("route through ...", "annotate ...")
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable id used by the CLI ``--baseline`` suppression file."""
+        return f"{self.path}::{self.checker}::{self.line}"
+
+    def format(self, fmt: str = "text") -> str:
+        if fmt == "github":
+            return (f"::error file={self.path},line={self.line},"
+                    f"title=contractcheck:{self.checker}::{self.message}")
+        out = f"{self.path}:{self.line}: [{self.checker}] {self.message}"
+        if self.hint:
+            out += f"\n    fix: {self.hint}"
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Checker configuration. Module sets are path *suffixes* (posix)."""
+
+    # shim discipline: the only module allowed to touch raw jax mesh APIs
+    shim_allowed: Tuple[str, ...] = ("launch/mesh.py",)
+
+    # lock discipline: modules whose guarded-attribute mutations must sit
+    # under the engine lock (plus any file carrying "# contract-scope: lock")
+    lock_modules: Tuple[str, ...] = (
+        "core/engine.py", "core/blockstore.py", "core/adjacency.py")
+
+    # the declared guarded-attribute set of docs/DESIGN.md §8/§9: queues,
+    # cache, in-flight table, device pool, block storage internals, stats
+    guarded_attrs: frozenset = frozenset({
+        "queues", "cache", "store", "_dev_pool", "_inflight", "_flights",
+        "stats", "worker_stats", "shard_stats", "_inv_shard",
+        "pools", "_store", "_core", "_entries", "_arrays", "evictions",
+    })
+    # method names that mutate their receiver
+    mutators: frozenset = frozenset({
+        "append", "appendleft", "extend", "insert", "pop", "popleft",
+        "popitem", "remove", "clear", "update", "put", "add", "discard",
+        "setdefault", "move_to_end", "bump",
+    })
+    # names treated as the engine lock in `with ...:` items
+    lock_names: Tuple[str, ...] = ("_cond", "cond", "_consumer_entry")
+    # functions exempt from the guarded-mutation rule (construction)
+    lock_exempt: Tuple[str, ...] = ("__init__", "_init_stats")
+
+    # EngineStats field-write rule (global): attributes whose fields may
+    # only be written inside these functions
+    stats_attrs: Tuple[str, ...] = ("stats", "worker_stats", "shard_stats")
+    stats_writers: Tuple[str, ...] = (
+        "bump", "_bump", "_bump_shard", "stat_bump", "reset_stats",
+        "merged", "__init__", "_init_stats")
+
+    # shard purity: modules whose `shard`-parameterized helpers must thread
+    # the index (plus any file carrying "# contract-scope: shard")
+    shard_modules: Tuple[str, ...] = (
+        "distributed/sharding.py", "core/engine.py", "core/blockstore.py")
+    shard_containers: frozenset = frozenset({
+        "pools", "devices", "shard_stats", "_shard_tables", "_inv_shard",
+        "bounds",
+    })
+
+    # np.* calls that convert device values to host memory
+    np_conversions: frozenset = frozenset({
+        "asarray", "array", "ascontiguousarray", "copy"})
+
+    # path substrings excluded from walks (the known-bad fixtures)
+    exclude: Tuple[str, ...] = ("tests/fixtures/contractcheck",)
+
+
+class ModuleContext:
+    """One parsed module: source, AST, and comment-token annotations."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        # line -> set of "# contract: <name>" annotations on that line
+        self.annotations: Dict[int, Set[str]] = {}
+        # module-level "# contract-scope: <name>" opt-in markers
+        self.scopes: Set[str] = set()
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type != tokenize.COMMENT:
+                continue
+            for m in _ANNOT_RE.finditer(tok.string):
+                self.annotations.setdefault(tok.start[0], set()).add(m.group(1))
+            for m in _SCOPE_RE.finditer(tok.string):
+                self.scopes.add(m.group(1))
+
+    @classmethod
+    def from_file(cls, path) -> "ModuleContext":
+        p = Path(path)
+        try:
+            rel = os.path.relpath(p)
+        except ValueError:  # pragma: no cover - different drive (windows)
+            rel = str(p)
+        if rel.startswith(".."):
+            rel = str(p)
+        return cls(Path(rel).as_posix(), p.read_text(encoding="utf-8"))
+
+    def func_contracts(self, node: ast.AST) -> Set[str]:
+        """Annotations attached to a function: on the line above its first
+        decorator (or the ``def``), or anywhere between the ``def`` line and
+        its first body statement."""
+        start = node.lineno
+        decos = getattr(node, "decorator_list", [])
+        if decos:
+            start = min(start, min(d.lineno for d in decos))
+        out: Set[str] = set()
+        for line in range(start - 1, node.body[0].lineno):
+            out |= self.annotations.get(line, set())
+        return out
+
+    def waived(self, node: ast.AST, name: str = "syncer-handoff") -> bool:
+        """True when an inline waiver annotation covers ``node``'s lines
+        (the line above it through its last line)."""
+        end = getattr(node, "end_lineno", node.lineno) or node.lineno
+        return any(name in self.annotations.get(line, ())
+                   for line in range(node.lineno - 1, end + 1))
+
+
+class Checker:
+    """Base class: subclasses set ``id`` and implement ``check``."""
+
+    id = "base"
+
+    def check(self, ctx: ModuleContext, cfg: Config) -> List[Violation]:
+        raise NotImplementedError
+
+    def violation(self, ctx: ModuleContext, node: ast.AST, message: str,
+                  hint: str = "") -> Violation:
+        return Violation(path=ctx.path, line=node.lineno, checker=self.id,
+                         message=message, hint=hint)
+
+
+def path_matches(rel: str, suffixes: Sequence[str]) -> bool:
+    return any(rel.endswith(s) for s in suffixes)
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def iter_functions(tree: ast.AST) -> Iterator[ast.AST]:
+    """Every function/async-function definition, at any nesting level."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def iter_python_files(paths: Iterable, cfg: Config) -> Iterator[Path]:
+    """The ``.py`` files under ``paths`` (files or directories), sorted,
+    minus the configured excludes (substring match on the posix path)."""
+    seen: Set[Path] = set()
+    for p in paths:
+        p = Path(p)
+        files = [p] if p.is_file() else sorted(p.rglob("*.py"))
+        for f in files:
+            if f.suffix != ".py" or f in seen:
+                continue
+            seen.add(f)
+            posix = f.as_posix()
+            if any(ex in posix for ex in cfg.exclude):
+                continue
+            yield f

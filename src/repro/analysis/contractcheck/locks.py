@@ -1,0 +1,348 @@
+"""Checkers 2 and 3 — lock discipline and blocking-under-lock.
+
+Both walk functions with a *lexical held-lock state*: code is "under the
+lock" inside a ``with self._cond:`` / ``with self._consumer_entry(...):``
+block, or anywhere in a function annotated ``# contract: holds-lock``
+(the engine's ``_``-helpers, whose caller holds the lock — DESIGN.md §8).
+The analysis is lexical, not interprocedural: a helper called under the
+lock is only covered if it carries the annotation itself. That is the
+contract's point — the annotation is the machine-readable promise the
+prose docstrings used to make.
+
+**lock-discipline** (core modules only): mutations of the declared
+guarded-attribute set — queues, cache, in-flight table, device pool, block
+storage internals, stats — are only legal under the lock. Aliases created
+from guarded state inside the function (``q = self.queues[r]``) are
+tracked. Everywhere (all scanned files): writing an ``EngineStats`` field
+directly (``eng.stats.requests += 1``, ``eng.stats = ...``) outside the
+sanctioned writers (``bump``/``_bump``/``stat_bump``/``reset_stats``/...)
+is an error — stat updates go through ``stat_bump`` so per-worker
+attribution and the ``merged_worker_stats() == stats`` invariant hold.
+
+**blocking-under-lock** (all scanned files): ``time.sleep``,
+``jax.block_until_ready`` / ``.block_until_ready()``, ``jax.device_get``,
+``Condition.wait`` and host conversion of attribute state
+(``np.asarray(launch.M)``) may not run while the lock is held — they
+stall every consumer and the producer. The single sanctioned exception is
+the syncer handoff of DESIGN.md §8, waived inline with
+``# contract: syncer-handoff``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from .base import Checker, Config, ModuleContext, Violation, dotted_name, \
+    path_matches
+
+LOCK_HINT = ("hold the engine lock: move the mutation under `with "
+             "self._cond:` or annotate the helper `# contract: holds-lock` "
+             "and make every caller hold it")
+STATS_HINT = ("route the update through stat_bump()/reset_stats() so it "
+              "lands under the lock with per-worker attribution")
+BLOCK_HINT = ("release the lock first (see _sync's syncer handoff, "
+              "DESIGN.md §8); only the sanctioned handoff may carry the "
+              "`# contract: syncer-handoff` waiver")
+
+_FUNC_DEFS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _is_lock_with_item(item: ast.withitem, cfg: Config) -> bool:
+    for n in ast.walk(item.context_expr):
+        if isinstance(n, ast.Attribute) and n.attr in cfg.lock_names:
+            return True
+        if isinstance(n, ast.Name) and n.id in cfg.lock_names:
+            return True
+    return False
+
+
+def _chain_guarded(expr: ast.AST, cfg: Config, aliases: Set[str]) -> bool:
+    """True when an expression's access chain touches guarded state: a
+    guarded attribute name, or a local alias bound from one."""
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Attribute) and n.attr in cfg.guarded_attrs:
+            return True
+        if isinstance(n, ast.Name) and n.id in aliases:
+            return True
+    return False
+
+
+#: methods whose return value aliases a member of the receiver (so
+#: ``hit = self.cache.get(key)`` makes ``hit`` guarded too); calls to
+#: anything else (``set(self.queues[r])``, ``len(...)``) yield copies
+_MEMBER_RETURNING = frozenset({"get", "setdefault", "pop", "popleft",
+                               "popitem"})
+
+
+def _is_aliasing_value(expr: ast.AST, cfg: Config, aliases: Set[str]) -> bool:
+    """True when ``expr`` evaluates to (a view of) guarded state: a bare
+    Name/Attribute/Subscript chain over it, or a member-returning method
+    call on it. Wrapping calls (``set(...)``) produce copies — not
+    aliases."""
+    while isinstance(expr, (ast.Subscript, ast.Attribute, ast.Starred)):
+        if (isinstance(expr, ast.Attribute)
+                and expr.attr in cfg.guarded_attrs):
+            return True
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        return expr.id in aliases
+    if (isinstance(expr, ast.Call)
+            and isinstance(expr.func, ast.Attribute)
+            and expr.func.attr in _MEMBER_RETURNING):
+        return _chain_guarded(expr.func.value, cfg, aliases)
+    return False
+
+
+def _collect_aliases(fn: ast.AST, cfg: Config) -> Set[str]:
+    """Local names bound to (views of) guarded state anywhere in ``fn``
+    (not descending into nested defs): ``q = self.queues[r]`` makes ``q``
+    guarded for the whole function — lexical SSA is not worth the
+    complexity for ~3 core modules."""
+    aliases: Set[str] = set()
+    changed = True
+    # iterate to a fixed point so alias-of-alias chains resolve
+    while changed:
+        changed = False
+        for node in stack_walk(fn.body):
+            if isinstance(node, ast.Assign):
+                if not _is_aliasing_value(node.value, cfg, aliases):
+                    continue
+                for t in node.targets:
+                    names = ([t] if isinstance(t, ast.Name) else
+                             [e for e in getattr(t, "elts", [])
+                              if isinstance(e, ast.Name)])
+                    for n in names:
+                        if n.id not in aliases:
+                            aliases.add(n.id)
+                            changed = True
+    return aliases
+
+
+def stack_walk(stmts):
+    """ast.walk over a statement list that does NOT descend into nested
+    function/class definitions (they get their own analysis pass)."""
+    stack = list(stmts)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, _FUNC_DEFS + (ast.ClassDef, ast.Lambda)):
+                stack.append(child)
+
+
+class _LockWalker:
+    """Shared lexical walk threading the held-lock state through one
+    function; subclasses get a callback per visited node."""
+
+    def __init__(self, ctx: ModuleContext, cfg: Config):
+        self.ctx = ctx
+        self.cfg = cfg
+        self.out: List[Violation] = []
+
+    def run(self, fn: ast.AST) -> None:
+        held = "holds-lock" in self.ctx.func_contracts(fn)
+        self.enter_function(fn)
+        self._visit_block(fn.body, held)
+
+    def _visit_block(self, stmts, held: bool) -> None:
+        for s in stmts:
+            self._visit(s, held)
+
+    def _visit(self, node: ast.AST, held: bool) -> None:
+        if isinstance(node, _FUNC_DEFS):
+            self.run(node)   # nested def: fresh lock context
+            return
+        if isinstance(node, (ast.ClassDef, ast.Lambda)):
+            return
+        self.visit_node(node, held)
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            lock = any(_is_lock_with_item(i, self.cfg) for i in node.items)
+            for i in node.items:
+                self._visit(i.context_expr, held)
+            self._visit_block(node.body, held or lock)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._visit(child, held)
+
+    def enter_function(self, fn: ast.AST) -> None:
+        pass
+
+    def visit_node(self, node: ast.AST, held: bool) -> None:
+        raise NotImplementedError
+
+
+class _MutationWalker(_LockWalker):
+    """lock-discipline: guarded mutations outside the lock."""
+
+    def __init__(self, checker, ctx, cfg):
+        super().__init__(ctx, cfg)
+        self.checker = checker
+        self.aliases: Set[str] = set()
+        self.exempt = False
+
+    def enter_function(self, fn: ast.AST) -> None:
+        self.aliases = _collect_aliases(fn, self.cfg)
+        self.exempt = fn.name in self.cfg.lock_exempt
+
+    def _guarded_target(self, t: ast.AST, augmented: bool = False) -> bool:
+        # rebinding a plain local never mutates engine state — only
+        # augmented assignment on an alias (`q += [...]`) can (list
+        # in-place extend); stores *through* an alias always do
+        if isinstance(t, (ast.Tuple, ast.List)):
+            return any(self._guarded_target(e, augmented) for e in t.elts)
+        if isinstance(t, ast.Name):
+            return augmented and t.id in self.aliases
+        if isinstance(t, (ast.Attribute, ast.Subscript, ast.Starred)):
+            return _chain_guarded(t, self.cfg, self.aliases)
+        return False
+
+    def visit_node(self, node: ast.AST, held: bool) -> None:
+        if held or self.exempt:
+            return
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                             ast.Delete)):
+            augmented = isinstance(node, ast.AugAssign)
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target] if not isinstance(node, ast.Delete)
+                       else node.targets)
+            for t in targets:
+                if t is not None and self._guarded_target(t, augmented):
+                    self.out.append(self.checker.violation(
+                        self.ctx, node,
+                        "mutation of lock-guarded engine state outside a "
+                        "held-lock region", LOCK_HINT))
+                    break
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            if (isinstance(fn, ast.Attribute)
+                    and fn.attr in self.cfg.mutators
+                    and _chain_guarded(fn.value, self.cfg, self.aliases)):
+                self.out.append(self.checker.violation(
+                    self.ctx, node,
+                    f"'.{fn.attr}()' on lock-guarded engine state outside "
+                    f"a held-lock region", LOCK_HINT))
+
+
+class LockDiscipline(Checker):
+    id = "lock-discipline"
+
+    def check(self, ctx: ModuleContext, cfg: Config) -> List[Violation]:
+        out: List[Violation] = []
+        in_scope = (path_matches(ctx.path, cfg.lock_modules)
+                    or "lock" in ctx.scopes)
+        if in_scope:
+            for fn in _top_level_functions(ctx.tree):
+                w = _MutationWalker(self, ctx, cfg)
+                w.run(fn)
+                out.extend(w.out)
+        out.extend(self._check_stats_writes(ctx, cfg))
+        return out
+
+    def _check_stats_writes(self, ctx: ModuleContext,
+                            cfg: Config) -> List[Violation]:
+        """Direct EngineStats field writes (global rule, every file)."""
+        out: List[Violation] = []
+        for fn in _top_level_functions(ctx.tree):
+            self._stats_in_function(fn, ctx, cfg, out)
+        return out
+
+    def _stats_in_function(self, fn, ctx, cfg, out) -> None:
+        allowed = fn.name in cfg.stats_writers
+        for node in stack_walk(fn.body):
+            if isinstance(node, _FUNC_DEFS):
+                self._stats_in_function(node, ctx, cfg, out)
+                continue
+            if allowed:
+                continue
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                if any(self._stats_target(t, cfg) for t in targets):
+                    out.append(self.violation(
+                        ctx, node,
+                        "direct EngineStats write outside "
+                        "_bump/stat_bump/reset_stats", STATS_HINT))
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "bump"
+                  and any(isinstance(n, ast.Attribute)
+                          and n.attr in cfg.stats_attrs
+                          for n in ast.walk(node.func.value))):
+                out.append(self.violation(
+                    ctx, node,
+                    "direct .bump() on an EngineStats field outside "
+                    "_bump/stat_bump", STATS_HINT))
+
+    @staticmethod
+    def _stats_target(t: ast.AST, cfg: Config) -> bool:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            return any(LockDiscipline._stats_target(e, cfg) for e in t.elts)
+        if isinstance(t, (ast.Attribute, ast.Subscript)):
+            return any(isinstance(n, ast.Attribute)
+                       and n.attr in cfg.stats_attrs
+                       for n in ast.walk(t))
+        return False
+
+
+class _BlockingWalker(_LockWalker):
+    """blocking-under-lock: device/thread stalls inside held-lock code."""
+
+    def __init__(self, checker, ctx, cfg):
+        super().__init__(ctx, cfg)
+        self.checker = checker
+
+    def visit_node(self, node: ast.AST, held: bool) -> None:
+        if not held or not isinstance(node, ast.Call):
+            return
+        msg = self._blocking_reason(node)
+        if msg and not self.ctx.waived(node):
+            self.out.append(self.checker.violation(
+                self.ctx, node, msg + " while holding the engine lock",
+                BLOCK_HINT))
+
+    def _blocking_reason(self, node: ast.Call):
+        fn = node.func
+        name = dotted_name(fn)
+        if name in ("time.sleep", "jax.block_until_ready", "jax.device_get"):
+            return f"'{name}' call"
+        if isinstance(fn, ast.Attribute):
+            if fn.attr == "block_until_ready":
+                return "'.block_until_ready()' call"
+            if fn.attr == "wait":
+                return "condition/event '.wait()' call"
+            if (fn.attr in self.cfg.np_conversions
+                    and isinstance(fn.value, ast.Name)
+                    and fn.value.id in ("np", "numpy")
+                    and node.args
+                    and isinstance(node.args[0], ast.Attribute)):
+                # host conversion of attribute state: the classic
+                # np.asarray(launch.M) device download. Conversions of
+                # locals (list staging) are host-only and stay legal.
+                return (f"host conversion 'np.{fn.attr}("
+                        f"{dotted_name(node.args[0]) or '...'})'")
+        return None
+
+
+class BlockingUnderLock(Checker):
+    id = "blocking-under-lock"
+
+    def check(self, ctx: ModuleContext, cfg: Config) -> List[Violation]:
+        out: List[Violation] = []
+        for fn in _top_level_functions(ctx.tree):
+            w = _BlockingWalker(self, ctx, cfg)
+            w.run(fn)
+            out.extend(w.out)
+        return out
+
+
+def _top_level_functions(tree: ast.AST):
+    """Functions not nested inside another function (nested defs are walked
+    by their enclosing function's walker, with a fresh lock context)."""
+    stack = list(ast.iter_child_nodes(tree))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, _FUNC_DEFS):
+            yield node
+        elif isinstance(node, ast.ClassDef):
+            stack.extend(ast.iter_child_nodes(node))

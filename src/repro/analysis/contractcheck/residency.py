@@ -1,0 +1,63 @@
+"""Checker 4 — device residency.
+
+Functions annotated ``# contract: device-resident`` are the accelerator
+arms of the consumer pipeline (the PR-4 consumer jits, the completion
+gather kernels, ``get_full_dev_many``'s fused gather): their value is that
+blocks NEVER round-trip to the host (docs/DESIGN.md §6, the
+``zero_host_reads`` CI rows). Inside them, host materialization of traced
+values is an error: ``np.asarray``/``np.array`` conversions,
+``jax.device_get``, ``.item()``/``.tolist()``, and ``float()`` of a
+non-constant. Static *shape math* on python ints (``int(np.ceil(...))``,
+``np.log2`` of a literal) stays legal — only conversion calls are flagged,
+not every ``np.*`` touch. The documented one-host-round-trip-per-batch
+download of the completion pipeline (DESIGN.md §6) is waived inline with
+``# contract: host-roundtrip``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .base import Checker, Config, ModuleContext, Violation, dotted_name, \
+    iter_functions
+
+HINT = ("keep the value on device (jnp ops / lax primitives); host "
+        "materialization belongs in the caller after the batch is released")
+
+
+class DeviceResidency(Checker):
+    id = "device-residency"
+
+    def check(self, ctx: ModuleContext, cfg: Config) -> List[Violation]:
+        out: List[Violation] = []
+        for fn in iter_functions(ctx.tree):
+            if "device-resident" not in ctx.func_contracts(fn):
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                msg = self._host_reason(node, cfg)
+                if msg and not ctx.waived(node, "host-roundtrip"):
+                    out.append(self.violation(
+                        ctx, node,
+                        f"{msg} inside a `# contract: device-resident` "
+                        f"function", HINT))
+        return out
+
+    def _host_reason(self, node: ast.Call, cfg: Config):
+        f = node.func
+        name = dotted_name(f)
+        if name == "jax.device_get":
+            return "'jax.device_get' call"
+        if isinstance(f, ast.Attribute):
+            if (f.attr in cfg.np_conversions
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id in ("np", "numpy")):
+                return f"host conversion 'np.{f.attr}(...)'"
+            if f.attr in ("item", "tolist"):
+                return f"'.{f.attr}()' call (forces a device sync)"
+        if (isinstance(f, ast.Name) and f.id == "float" and node.args
+                and not isinstance(node.args[0], ast.Constant)):
+            return "'float(...)' of a (potentially traced) value"
+        return None

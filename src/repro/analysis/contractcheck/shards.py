@@ -1,0 +1,87 @@
+"""Checker 5 — shard purity (docs/DESIGN.md §9).
+
+The sharded engine's correctness rests on every per-shard touch threading
+an *explicit* shard index: launches are shard-pure, per-shard pools bound
+their own device's memory, and per-shard stats prove no segment was
+produced on two shards. A helper that takes a ``shard`` parameter but then
+indexes a per-shard container with a constant (``self.pools[0]``) or
+enumerates the global device pool (``jax.devices()``) silently breaks the
+bound on every plan with more than one shard — single-device CI never
+notices. In the configured shard modules (plus ``# contract-scope: shard``
+opt-ins), such helpers must use the ``shard`` parameter in every
+per-shard-container subscript.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .base import Checker, Config, ModuleContext, Violation, dotted_name, \
+    iter_functions, path_matches
+
+HINT = ("index per-shard containers with the helper's `shard` parameter "
+        "(or a value derived from it); never a constant or the global "
+        "device list")
+
+
+def _param_names(fn) -> List[str]:
+    a = fn.args
+    return [p.arg for p in
+            list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+
+
+def _shard_derived(fn) -> set:
+    """``shard`` plus every local assigned from an expression mentioning a
+    shard-derived name (``key = (kind, int(shard))`` threads the index
+    through ``key``), to a fixed point."""
+    derived = {"shard"}
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if any(isinstance(n, ast.Name) and n.id in derived
+                       for n in ast.walk(node.value)):
+                    for t in node.targets:
+                        for n in ast.walk(t):
+                            if (isinstance(n, ast.Name)
+                                    and isinstance(n.ctx, ast.Store)
+                                    and n.id not in derived):
+                                derived.add(n.id)
+                                changed = True
+    return derived
+
+
+class ShardPurity(Checker):
+    id = "shard-purity"
+
+    def check(self, ctx: ModuleContext, cfg: Config) -> List[Violation]:
+        if not (path_matches(ctx.path, cfg.shard_modules)
+                or "shard" in ctx.scopes):
+            return []
+        out: List[Violation] = []
+        for fn in iter_functions(ctx.tree):
+            if "shard" not in _param_names(fn):
+                continue
+            derived = _shard_derived(fn)
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Subscript):
+                    base = node.value
+                    if (isinstance(base, ast.Attribute)
+                            and base.attr in cfg.shard_containers
+                            and not any(isinstance(n, ast.Name)
+                                        and n.id in derived
+                                        for n in ast.walk(node.slice))):
+                        out.append(self.violation(
+                            ctx, node,
+                            f"per-shard container '.{base.attr}[...]' "
+                            f"indexed without the 'shard' parameter in a "
+                            f"shard-parameterized helper", HINT))
+                elif (isinstance(node, ast.Call)
+                      and dotted_name(node.func) == "jax.devices"):
+                    out.append(self.violation(
+                        ctx, node,
+                        "global 'jax.devices()' enumeration inside a "
+                        "shard-parameterized helper", HINT))
+        return out

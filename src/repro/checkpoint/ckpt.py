@@ -15,7 +15,7 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -21,6 +21,11 @@ _MODULES = {
 
 ARCH_IDS = tuple(_MODULES)
 
+__all__ = [
+    "ARCH_IDS", "ArchConfig", "SHAPES", "ShapeConfig",
+    "get_config", "get_smoke_config", "shape_applicable",
+]
+
 
 def get_config(arch_id: str) -> ArchConfig:
     return _MODULES[arch_id].CONFIG

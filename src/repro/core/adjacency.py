@@ -204,6 +204,7 @@ _PAIR_WIDTH = {"E": 2, "F": 3, "T": 4}
 _pow2 = ops.bucket_rows
 
 
+# contract: device-resident
 def execute_completion_device(eng: RelationEngine, plan: CompletionPlan,
                               out: str = "host"
                               ) -> Tuple[np.ndarray, np.ndarray]:
@@ -287,8 +288,9 @@ def execute_completion_device(eng: RelationEngine, plan: CompletionPlan,
                 f"preallocated width is deg[{relation!r}]={deg}; construct "
                 f"the engine with deg={{{relation!r}: {worst}}} (or larger).")
         return M_dev[:n], L_dev[:n]
-    Mh = np.asarray(M_dev)[:n]          # the batch's ONE host round trip
-    Lh = np.asarray(L_dev)[:n]
+    # the batch's documented ONE host round trip (DESIGN.md §6):
+    Mh = np.asarray(M_dev)[:n]          # contract: host-roundtrip
+    Lh = np.asarray(L_dev)[:n]          # contract: host-roundtrip
     worst = int(Lh.max()) if n else 0
     if worst > deg:
         raise RelationWidthError(

@@ -21,7 +21,9 @@ device retains only its own segments' blocks, so ``dev_pool_segments``
 bounds hold per device.
 
 Thread-safety: none of these classes lock; the engine serialises access
-under its single condition lock (DESIGN.md §8).
+under its single condition lock (DESIGN.md §8). Every mutating surface
+(``get`` touches LRU recency too) is annotated ``# contract: holds-lock``
+so contractcheck's lock-discipline rule verifies the callers.
 """
 
 from __future__ import annotations
@@ -45,12 +47,14 @@ class _LRUCore:
         self.evictions = 0
 
     def get(self, key: Any) -> Any:
+        # contract: holds-lock
         val = self._store.get(key)
         if val is not None:
             self._store.move_to_end(key)
         return val
 
     def put(self, key: Any, value: Any) -> List[Tuple[Any, Any]]:
+        # contract: holds-lock
         if key in self._store:
             self._store.move_to_end(key)
         self._store[key] = value
@@ -88,9 +92,11 @@ class SegmentCache:
         return self._core.evictions
 
     def get(self, key):
+        # contract: holds-lock
         return self._core.get(key)
 
     def put(self, key, value) -> None:
+        # contract: holds-lock
         self._core.put(key, value)
 
     def __contains__(self, key) -> bool:
@@ -125,6 +131,7 @@ class DevBlockPool:
         return self._core.evictions
 
     def get(self, key):
+        # contract: holds-lock
         ent = self._entries.get(key)
         if ent is None:
             return None
@@ -133,6 +140,7 @@ class DevBlockPool:
         return M, L, idx
 
     def put(self, key, M, L, idx) -> None:
+        # contract: holds-lock
         aid = id(M)
         if aid in self._arrays:
             self._core.get(aid)  # re-touch: most-recent
@@ -186,9 +194,11 @@ class BlockStore:
 
     # -- DevBlockPool surface, shard-routed --------------------------------
     def get(self, key):
+        # contract: holds-lock
         return self.pools[self.shard_of(key[1])].get(key)
 
     def put(self, key, M, L, idx) -> None:
+        # contract: holds-lock
         self.pools[self.shard_of(key[1])].put(key, M, L, idx)
 
     def __contains__(self, key) -> bool:

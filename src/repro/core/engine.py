@@ -81,12 +81,10 @@ import numpy as np
 from ..distributed.sharding import ShardPlan
 from ..kernels import ops
 from .blockstore import BlockStore, DevBlockPool, SegmentCache
-from .mesh import SegmentedMesh
 from .segtables import (
     OFFLOADED_RELATIONS,
     Preconditioned,
     RELATION_TABLES,
-    SegmentTables,
 )
 
 
@@ -203,6 +201,7 @@ class StatsHost:
             self._tl.worker = prev
 
     def _bump(self, **deltas) -> None:
+        # contract: holds-lock
         """Stat update; the caller must hold ``self._cond``."""
         w = getattr(self._tl, "worker", None) or "main"
         ws = self.worker_stats.get(w)
@@ -218,6 +217,7 @@ class StatsHost:
             self._bump(**deltas)
 
     def _bump_shard(self, shard: int, **deltas) -> None:
+        # contract: holds-lock
         """Producer-side stat update attributed to segment shard ``shard``
         (in addition to the global/worker landing the caller does via
         :meth:`_bump`). The caller must hold ``self._cond``."""
@@ -225,6 +225,18 @@ class StatsHost:
         if ss is None:
             ss = self.shard_stats[shard] = EngineStats()
         ss.bump(**deltas)
+
+    def reset_stats(self) -> None:
+        """Zero every counter (global + per-worker + per-shard) under the
+        lock — the sanctioned way for benchmarks to separate warmup from
+        timed runs. Rebinding ``.stats`` directly would bypass the lock and
+        orphan the per-worker breakdown (the ``merged_worker_stats() ==
+        stats`` invariant); contractcheck's lock-discipline rule rejects
+        it."""
+        with self._cond:
+            self.stats = EngineStats()
+            self.worker_stats = {}
+            self.shard_stats = {}
 
     def merged_worker_stats(self) -> EngineStats:
         """Deterministic merge of the per-worker breakdown (sorted worker
@@ -294,6 +306,7 @@ class ConsumerBatch:
 
 @functools.partial(jax.jit, static_argnames=("w",))
 def _gather_internal(pool_M, pool_L, flat, gid, w: int):
+    # contract: device-resident
     """One fused device gather per (relation, batch): pick the internal
     rows (``flat`` indexes the flattened slot-rows), trim columns to the
     static width ``w``, and mask bucket-padding rows (``gid == -1``) to the
@@ -470,6 +483,34 @@ class RelationEngine(StatsHost):
 
     # -- consumer-side API --------------------------------------------------
 
+    @contextlib.contextmanager
+    def _consumer_entry(self, method: str):
+        """Public consumer-method entry: rejects re-entrant entry, then
+        acquires the engine lock exactly once.
+
+        The lock is a plain (non-reentrant) ``threading.Condition``, so a
+        nested public call from a thread already inside one — consumer code
+        invoked from the producer's dispatch path, or a callback fired under
+        the lock — would deadlock silently, with no traceback until the
+        scheduler-stress job's hard timeout SIGABRTs it. The thread-local
+        entry marker turns that hang into an immediate ``RuntimeError``
+        naming both methods. Lock-free table accessors (``local_rows``,
+        ``boundary_*``, ``dev_inverse``) stay legal anywhere."""
+        held = getattr(self._tl, "engine_method", None)
+        if held is not None:
+            raise RuntimeError(
+                f"re-entrant call into RelationEngine.{method}() from "
+                f"RelationEngine.{held}() on the same thread: the engine "
+                f"lock (docs/DESIGN.md §8) is not re-entrant, so this call "
+                f"would deadlock. Finish the {held}() call first, or use "
+                f"the lock-free table accessors (local_rows, boundary_*).")
+        self._tl.engine_method = method
+        try:
+            with self._cond:
+                yield
+        finally:
+            self._tl.engine_method = None
+
     def request(self, relation: str, segments: Sequence[int]) -> None:
         """Non-blocking enqueue (consumer -> leader queue).
 
@@ -478,10 +519,11 @@ class RelationEngine(StatsHost):
         guarantee: a segment already cached, in flight, or pending is not
         enqueued again, so a block is never produced twice no matter how
         often it is requested."""
-        with self._cond:
+        with self._consumer_entry("request"):
             self._request(relation, segments)
 
     def _request(self, relation: str, segments: Sequence[int]) -> None:
+        # contract: holds-lock
         t0 = time.perf_counter()
         q = self.queues[relation]
         qs = set(q)
@@ -506,7 +548,7 @@ class RelationEngine(StatsHost):
         the segment, dispatches one batched launch, and waits for it.
         De-dup guarantee: a miss never re-produces segments that are cached
         or in flight — only genuinely missing ones enter the launch."""
-        with self._cond:
+        with self._consumer_entry("get"):
             segment = int(segment)
             self._bump(requests=1)
             self._count(relation, segment)
@@ -522,7 +564,7 @@ class RelationEngine(StatsHost):
         method, so misses take the normal dispatch path and are counted in
         ``stats.cache_misses`` (never silently served as empty). Blocking
         behavior and de-dup guarantee are identical to :meth:`get`."""
-        with self._cond:
+        with self._consumer_entry("get_full"):
             segment = int(segment)
             self._bump(requests=1)
             self._count(relation, segment)
@@ -541,7 +583,7 @@ class RelationEngine(StatsHost):
         Misses take the normal dispatch path and are counted exactly like
         :meth:`get_full`; blocking behavior and de-dup guarantee are
         identical."""
-        with self._cond:
+        with self._consumer_entry("get_full_dev"):
             M, L, i = self._dev_entry(relation, int(segment))
         return (M, L) if i is None else (M[i], L[i])
 
@@ -558,7 +600,7 @@ class RelationEngine(StatsHost):
         launch are assembled with ONE device gather per launch (plus one
         permutation take) instead of one slice per segment — the completion
         gather path's pool builder."""
-        with self._cond:
+        with self._consumer_entry("get_full_dev_batch"):
             segments = [int(s) for s in segments]
             ents = [self._dev_entry(relation, s) for s in segments]
             return self._stack_entries(ents, pad_to)
@@ -610,6 +652,7 @@ class RelationEngine(StatsHost):
         return pool_M, pool_L
 
     def _dev_entry(self, relation: str, segment: int):
+        # contract: holds-lock
         """Pooled device block entry ``(M, L, idx_or_None)`` for one
         segment, producing/uploading on miss (shared by get_full_dev and
         get_full_dev_batch; one request count per call). Lock held."""
@@ -702,7 +745,7 @@ class RelationEngine(StatsHost):
 
         # producer interaction under the lock: prefetch + pool-entry
         # resolution (which may sync in-flight launches)
-        with self._cond:
+        with self._consumer_entry("get_full_dev_many"):
             self._prefetch_many({r: segments for r in relations})
             ents_by_rel = {r: [self._dev_entry(r, s) for s in segments]
                            for r in relations}
@@ -765,12 +808,16 @@ class RelationEngine(StatsHost):
         if shard is None or not self._multi_dev:
             return base
         key = (kind, int(shard))
-        cached = self._inv_shard.get(key)
+        with self._cond:
+            cached = self._inv_shard.get(key)
         if cached is None:
             d = self.shard_plan.devices[shard]
+            # stage OUTSIDE the lock (device transfer), publish under it;
+            # a concurrent duplicate staging is idempotent
             cached = tuple(jax.device_put(a, d) if a is not None else None
                            for a in base[:4]) + (base[4],)
-            self._inv_shard[key] = cached
+            with self._cond:
+                self._inv_shard[key] = cached
         return cached
 
     def get_batch(self, relation: str, segments: Sequence[int]):
@@ -781,7 +828,7 @@ class RelationEngine(StatsHost):
         call blocks until every requested block is ready. Duplicate segment
         ids in ``segments`` are served from the same produced block — the
         de-dup guarantee is per ``(relation, segment)``, not per call."""
-        with self._cond:
+        with self._consumer_entry("get_batch"):
             segments = [int(s) for s in segments]
             self._bump(requests=len(segments))
             for s in segments:
@@ -802,7 +849,7 @@ class RelationEngine(StatsHost):
         (when a later call finds them ready) or at the first blocking read.
         Segments already cached / in flight / pending are skipped entirely
         (de-dup), so repeated prefetch of a traversal window is free."""
-        with self._cond:
+        with self._consumer_entry("prefetch"):
             self._request(relation, segments)
             self._drain([relation])
 
@@ -813,10 +860,11 @@ class RelationEngine(StatsHost):
         :meth:`prefetch` per relation but interleaves dispatch fairly;
         unknown relations are ignored. Same de-dup guarantee as
         :meth:`prefetch`."""
-        with self._cond:
+        with self._consumer_entry("prefetch_many"):
             self._prefetch_many(requests)
 
     def _prefetch_many(self, requests: Dict[str, Sequence[int]]) -> None:
+        # contract: holds-lock
         for r, segs in requests.items():
             if r in self.queues:
                 self._request(r, segs)
@@ -833,6 +881,7 @@ class RelationEngine(StatsHost):
     # -- leader-producer side -----------------------------------------------
 
     def _count(self, relation: str, segment: int) -> None:
+        # contract: holds-lock
         key = (relation, segment)
         if key in self.cache:
             self._bump(cache_hits=1)
@@ -843,6 +892,7 @@ class RelationEngine(StatsHost):
 
     def _fetch(self, relation: str, segment: int, full: bool = False
                ) -> Tuple[np.ndarray, np.ndarray]:
+        # contract: holds-lock
         """Stat-free read: serve from cache, else sync the in-flight launch,
         else queue-jump + dispatch + sync. Used by get()/get_full()/
         get_batch(); ``full`` keeps external + padding rows. Lock held
@@ -874,14 +924,15 @@ class RelationEngine(StatsHost):
             # MRU put guarantees the re-read hits and the loop terminates
         M, L, n_rows = hit
         t0 = time.perf_counter()
-        if full:
-            out = (np.asarray(M), np.asarray(L))
-        else:
-            out = (np.asarray(M[:n_rows]), np.asarray(L[:n_rows]))
+        # cached blocks are host ndarrays (see _integrate), so the views
+        # need no conversion — and converting under the lock would trip
+        # contractcheck's blocking-under-lock rule
+        out = (M, L) if full else (M[:n_rows], L[:n_rows])
         self._bump(t_integrate=time.perf_counter() - t0)
         return out
 
     def _drain(self, relations: Optional[Sequence[str]] = None) -> None:
+        # contract: holds-lock
         """Round-robin one bounded pass over the pending queues, dispatching
         up to ``batch_max`` segments per relation per turn so several
         relation kernels can be in flight at once. The budget is fixed at
@@ -902,6 +953,7 @@ class RelationEngine(StatsHost):
         self._harvest()
 
     def _harvest(self) -> None:
+        # contract: holds-lock
         """Retire completed in-flight launches into the cache without
         blocking (zero-wait integration of finished futures). Launches a
         consumer thread is already syncing are left to that thread."""
@@ -913,6 +965,7 @@ class RelationEngine(StatsHost):
                 l for l in self._flights if not l.done)
 
     def _sync(self, launch: _Launch) -> None:
+        # contract: holds-lock
         """Block until a dispatched launch is ready (consumer wait — the
         paper's Fig. 10 'waiting' metric) and integrate it exactly once.
 
@@ -930,7 +983,7 @@ class RelationEngine(StatsHost):
         t0 = time.perf_counter()
         if launch.syncing:
             while launch.syncing and not launch.done:
-                self._cond.wait()
+                self._cond.wait()   # contract: syncer-handoff
             if not launch.done:       # syncer failed: take over the sync
                 return self._sync(launch)
             self._bump(t_sync=time.perf_counter() - t0)
@@ -938,6 +991,8 @@ class RelationEngine(StatsHost):
         launch.syncing = True
         self._cond.release()
         try:
+            # the ONE device wait that runs lock-free (released above,
+            # re-acquired below)  # contract: syncer-handoff
             jax.block_until_ready((launch.M, launch.L))
         finally:
             self._cond.acquire()
@@ -948,6 +1003,7 @@ class RelationEngine(StatsHost):
         self._cond.notify_all()
 
     def _integrate(self, launch: _Launch) -> None:
+        # contract: holds-lock
         if launch.done:
             return
         t0 = time.perf_counter()
@@ -955,8 +1011,8 @@ class RelationEngine(StatsHost):
         # blocks must be host arrays, not device views: a lazy device slice
         # would queue behind later in-flight kernels on the single device
         # stream, so reads of batch k would stall on batch k+1's launch.
-        Mh = np.asarray(launch.M)
-        Lh = np.asarray(launch.L)
+        Mh = np.asarray(launch.M)   # contract: syncer-handoff (ready)
+        Lh = np.asarray(launch.L)   # contract: syncer-handoff (ready)
         # Preallocated-width contract (paper §4.6): L is the TRUE row count
         # while M holds at most deg entries, so L > deg means the compaction
         # silently dropped neighbours. Fail loudly with the fix.
@@ -984,6 +1040,7 @@ class RelationEngine(StatsHost):
                    t_integrate=time.perf_counter() - t0)
 
     def _lookahead_segments(self, relation: str, batch: List[int]) -> List[int]:
+        # contract: holds-lock
         """Extend a drained batch with subsequent segments (paper §4.5:
         'the workload ... includes not only the currently requested segments
         but also subsequent segments for proactive precomputation').
@@ -1011,6 +1068,7 @@ class RelationEngine(StatsHost):
         return out
 
     def _dispatch(self, relation: str) -> Optional[_Launch]:
+        # contract: holds-lock
         """Drain the queue for ``relation`` (up to ``batch_max``), add
         lookahead, and dispatch one batched kernel. Never blocks when
         ``async_dispatch`` is on: the returned launch holds device-array
@@ -1102,6 +1160,7 @@ class RelationEngine(StatsHost):
 
     def _table_dev(self, kind: str, segs: jnp.ndarray,
                    tabs: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        # contract: holds-lock
         """Stacked per-segment table for ``kind`` from one shard's sliced
         tables (``segs`` are shard-local indices)."""
         if kind == "V":

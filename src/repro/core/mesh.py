@@ -18,7 +18,6 @@ initialization phase.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

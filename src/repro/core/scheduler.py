@@ -260,6 +260,8 @@ def run_partitioned(
         for i in range(n):
             with cond:
                 while results[i] is _PENDING and not abort.is_set():
+                    # the scheduler's handoff point: workers post results
+                    # and notify  # contract: syncer-handoff
                     if not cond.wait(timeout=1.0):
                         if (not any(t.is_alive() for t in threads)
                                 and results[i] is _PENDING

@@ -24,9 +24,9 @@ from typing import Any, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..launch.mesh import make_mesh, shard_map_compat
+from ..launch.mesh import Mesh, make_mesh, shard_map_compat
 
 
 # ===========================================================================

@@ -83,6 +83,7 @@ def _resolve_lex(inv_seg, inv_gid, inv_row, seg, gid):
     return jnp.where(found, inv_row[pos], -1)
 
 
+# contract: device-resident
 @functools.partial(jax.jit, static_argnames=("n_global",))
 def _resolve_jit(inv_seg, inv_gid, inv_row, inv_key, seg, gid, n_global):
     if inv_key is not None:
@@ -129,6 +130,7 @@ def _union_impl(cand, cand_len, pair_gid, pair_at, deg_out):
     return M, L, raw, L.sum()
 
 
+# contract: device-resident
 @functools.partial(jax.jit, static_argnames=("deg_out",))
 def _union_jit(cand, cand_len, pair_gid, pair_at, deg_out):
     return _union_impl(cand, cand_len, pair_gid, pair_at, deg_out)
@@ -137,6 +139,7 @@ def _union_jit(cand, cand_len, pair_gid, pair_at, deg_out):
 # -- per-shard gather (the sharded exchange's local half) --------------------
 
 
+# contract: device-resident
 @functools.partial(jax.jit, static_argnames=("n_global",))
 def _gather_candidates_xla(pool_M, pool_L, inv_seg, inv_gid, inv_row,
                            inv_key, pair_slot, pair_seg, pair_gid, n_global):
@@ -183,6 +186,7 @@ def union_pairs(cand, cand_len, pair_gid, pair_at, deg_out: int):
 # -- xla backend: one fused dispatch -----------------------------------------
 
 
+# contract: device-resident
 @functools.partial(jax.jit, static_argnames=("deg_out", "n_global"))
 def _gather_union_xla(pool_M, pool_L, inv_seg, inv_gid, inv_row, inv_key,
                       pair_slot, pair_seg, pair_gid, pair_at,
@@ -233,6 +237,7 @@ def _gather_kernel(invs_ref, invg_ref, invr_ref, seg_ref, gid_ref, slot_ref,
     clen_ref[0, :] = jnp.where(ok, jnp.take(poolL_ref[0, :], flat), 0)
 
 
+# contract: device-resident
 @functools.partial(jax.jit,
                    static_argnames=("K", "interpret", "block_pairs"))
 def _resolve_gather_pallas(pool_M, pool_L, inv_seg2, inv_gid2, inv_row2,

@@ -15,7 +15,6 @@ matrices and cast back to int32.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -15,6 +15,10 @@ a mesh must go through the shims here instead of calling jax directly:
     legacy ``with mesh:`` thread-resources context on 0.4.x.
   - :func:`shard_map_compat` — ``jax.shard_map`` / experimental shard_map
     with the ``check_vma``/``check_rep`` kwarg rename papered over.
+  - :data:`Mesh` — re-export of ``jax.sharding.Mesh`` for type annotations.
+    contractcheck's shim-discipline rule forbids importing it from
+    ``jax.sharding`` anywhere else, so every raw-API touch stays in this
+    one file.
 """
 
 from __future__ import annotations
@@ -22,6 +26,10 @@ from __future__ import annotations
 import contextlib
 
 import jax
+from jax.sharding import Mesh
+
+__all__ = ["Mesh", "make_mesh", "use_mesh", "shard_map_compat",
+           "make_production_mesh", "make_test_mesh", "batch_axes"]
 
 
 def make_mesh(shape, axes):

@@ -8,7 +8,7 @@ from __future__ import annotations
 import json
 import os
 import sys
-from typing import Dict, List
+from typing import List
 
 SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 
@@ -51,11 +51,11 @@ def roofline_table(recs: List[dict]) -> str:
     for r in rows:
         if r.get("status") == "skipped":
             lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
-                         f"SKIP (full attention @500k) | — | — | — | — |")
+                         "SKIP (full attention @500k) | — | — | — | — |")
             continue
         if r.get("status") != "ok":
             lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
-                         f"ERROR | — | — | — | — |")
+                         "ERROR | — | — | — | — |")
             continue
         t = r["roofline"]
         m = r["memory"]

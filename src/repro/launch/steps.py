@@ -3,8 +3,6 @@ server, and the dry-run."""
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import ckpt
 from ..configs import ARCH_IDS, get_config, get_smoke_config
@@ -94,8 +93,6 @@ def main(argv=None):
     injector = FaultInjector(
         [args.inject_fault_at] if args.inject_fault_at >= 0 else [])
     watchdog = StragglerWatchdog()
-
-    batches = {}
 
     def batch_for_step(step):
         # deterministic in step -> replay after restart is bit-identical

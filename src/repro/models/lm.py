@@ -15,8 +15,7 @@ Entry points (used by launch/{train,serve,dryrun}.py):
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

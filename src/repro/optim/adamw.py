@@ -9,7 +9,6 @@ ZeRO-style for free under pjit).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,21 @@
+"""Known-bad fixture: blocking calls while holding the lock
+(blocking-under-lock only).
+
+Excluded from the default contractcheck scan; tests/test_contractcheck.py
+scans it explicitly and asserts the exact violations below.
+"""
+import threading
+import time
+
+
+class MiniWorker:
+    def __init__(self):
+        self._cond = threading.Condition()
+
+    def spin(self):
+        with self._cond:
+            time.sleep(0.01)            # line 17: sleep under the lock
+            self._cond.wait()           # line 18: un-waived condvar wait
+
+    def spin_free(self):
+        time.sleep(0.01)                # lock not held: legal

@@ -1,0 +1,28 @@
+"""Known-bad fixture: guarded-state writes without the lock
+(lock-discipline only).
+
+Excluded from the default contractcheck scan; tests/test_contractcheck.py
+scans it explicitly and asserts the exact violations below.
+"""
+# contract-scope: lock
+import threading
+
+
+class MiniEngine:
+    def __init__(self):                 # __init__ is lock-exempt
+        self._cond = threading.Condition()
+        self.queues = {}
+        self.stats = object()
+
+    def enqueue(self, relation, seg):
+        self.queues[relation] = [seg]   # line 18: guarded write, no lock
+
+    def flush(self):
+        self.queues.clear()             # line 21: guarded mutator, no lock
+
+    def reset(self):
+        self.stats = object()           # line 24: stats write outside _bump
+
+    def drain_locked(self, relation):
+        with self._cond:                # under the lock: legal
+            return self.queues.pop(relation, [])

@@ -1,0 +1,18 @@
+"""Known-bad fixture: host materialization inside a device-resident
+function (device-residency only).
+
+Excluded from the default contractcheck scan; tests/test_contractcheck.py
+scans it explicitly and asserts the exact violations below.
+"""
+import numpy as np
+
+
+# contract: device-resident
+def gather_block(block):
+    M = np.asarray(block.M)             # line 12: host conversion
+    scale = float(block.scale)          # line 13: traced -> python float
+    return M, scale
+
+
+def gather_host(block):                 # un-annotated: legal
+    return np.asarray(block.M)

@@ -1,0 +1,21 @@
+"""Known-bad fixture: shard-parameterized helper ignoring its shard
+index (shard-purity only).
+
+Excluded from the default contractcheck scan; tests/test_contractcheck.py
+scans it explicitly and asserts the exact violations below.
+"""
+# contract-scope: shard
+import jax
+
+
+class MiniStore:
+    def __init__(self, pools):
+        self.pools = pools
+
+    def lookup(self, shard, key):
+        pool = self.pools[0]            # line 16: constant shard index
+        dev = jax.devices()[0]          # line 17: global device enumeration
+        return pool, dev, key
+
+    def lookup_pure(self, shard, key):
+        return self.pools[shard], key   # threads the index: legal

@@ -1,0 +1,14 @@
+"""Known-bad fixture: raw mesh/shard-map API use (shim-discipline only).
+
+Excluded from the default contractcheck scan (Config.exclude) and from
+ruff; tests/test_contractcheck.py scans it explicitly and asserts the
+exact violations below — it proves the shim-discipline checker is live.
+"""
+from jax.sharding import Mesh  # line 7: banned import
+
+
+def build(devices):
+    import jax
+    mesh = jax.sharding.Mesh(devices, ("data",))  # line 12: raw construction
+    jax.set_mesh(mesh)                            # line 13: raw mesh install
+    return Mesh, mesh                             # no call -> no extra hit

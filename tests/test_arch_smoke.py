@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: reduced same-family configs, one forward +
 train-grad step + one decode step on CPU; asserts shapes and finiteness."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,8 @@
 """BlockStore layer: the shared LRU core, launch-granularity pinning in the
-device pool, and shard routing (docs/DESIGN.md §6/§9)."""
+device pool, shard routing, and occupancy conservation across eviction
+(docs/DESIGN.md §6/§9)."""
+
+import threading
 
 import numpy as np
 
@@ -137,3 +140,87 @@ class TestBlockStore:
         assert st.pools[0].evictions == 3
         assert st.pools[1].evictions == 0
         assert st.evictions == 3
+
+
+def _pool_consistent(pool):
+    """Bidirectional entries<->arrays consistency: every entry points at a
+    live backing array that lists it, and every listed key maps back."""
+    for key, (aid, _) in pool._entries.items():
+        assert aid in pool._arrays, (key, aid)
+        assert key in pool._arrays[aid][2], key
+    for aid, (_, _, keys) in pool._arrays.items():
+        for key in keys:
+            assert pool._entries.get(key, (None,))[0] == aid, key
+
+
+class TestOccupancyConservation:
+    def test_occupancy_totals_conserve_across_eviction(self):
+        """Across any churn, per-shard occupancy totals must satisfy
+        arrays <= max_arrays, entries == live-entry count, and bytes ==
+        exactly the live backing arrays' bytes — evicted launches leave no
+        residue in any column (satellite of docs/DESIGN.md §9)."""
+        st = BlockStore(cache_segments=8, pool_arrays=2, n_shards=2,
+                        shard_of=lambda s: s % 2)
+        per_block = _arr().size * 4 * 2          # M + L, int32
+        for seg in range(12):                    # 6 launches per shard
+            A = _arr(fill=seg)
+            st.put(("VV", seg), A, _arr(fill=-seg), 0)
+            occ = st.shard_occupancy()
+            for p, o in zip(st.pools, occ):
+                assert o["arrays"] == len(p._arrays) <= p.max_arrays
+                assert o["entries"] == len(p)
+                assert o["bytes"] == o["arrays"] * per_block
+                _pool_consistent(p)
+        # 6 single-segment launches through a 2-array pool: 4 evicted each
+        assert [p.evictions for p in st.pools] == [4, 4]
+        assert sum(o["entries"] for o in st.shard_occupancy()) == len(st)
+
+    def test_rekey_discard_under_concurrent_touch(self):
+        """Workers re-producing segments into fresh launches while others
+        touch (get) them — serialised by an external lock, as the engine's
+        condition lock does — must never strand an entry on an evicted
+        backing array or leak keyset members (the re-key discard path)."""
+        pool = DevBlockPool(3)
+        lock = threading.Lock()
+        segs = list(range(6))
+        errors = []
+
+        def producer(tid):
+            try:
+                for round_ in range(50):
+                    seg = segs[(tid + round_) % len(segs)]
+                    A = _arr(fill=tid * 1000 + round_)
+                    with lock:
+                        pool.put(("VV", seg), A, A, 0)
+            except Exception as e:  # pragma: no cover - failure path
+                errors.append(e)
+
+        def toucher(tid):
+            try:
+                for round_ in range(50):
+                    seg = segs[(tid * 3 + round_) % len(segs)]
+                    with lock:
+                        got = pool.get(("VV", seg))
+                        if got is not None:
+                            M, L, idx = got
+                            assert M is L  # producer puts A for both
+            except Exception as e:  # pragma: no cover - failure path
+                errors.append(e)
+
+        threads = ([threading.Thread(target=producer, args=(t,))
+                    for t in range(3)]
+                   + [threading.Thread(target=toucher, args=(t,))
+                      for t in range(3)])
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        _pool_consistent(pool)
+        assert len(pool._arrays) <= 3
+        # every live segment resolves to its CURRENT backing array
+        for seg in segs:
+            got = pool.get(("VV", seg))
+            if got is not None:
+                M, _, _ = got
+                assert id(M) == pool._entries[("VV", seg)][0]

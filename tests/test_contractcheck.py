@@ -1,0 +1,184 @@
+"""The contract linter (docs/DESIGN.md §11): fixture liveness, real-tree
+cleanliness, CLI behaviour, and the re-entrancy guard the lock contracts
+protect.
+
+Each fixture under tests/fixtures/contractcheck/ is a known-bad module
+that must trip exactly ONE checker at exactly the commented lines — that
+proves every checker is live (a checker that silently stopped matching
+fails these tests, not just the tree scan)."""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.contractcheck import CHECKERS, Config, run_checks
+from repro.analysis.contractcheck.base import ModuleContext, Violation
+from repro.core.engine import RelationEngine
+from repro.core.mesh import segment_mesh
+from repro.core.segtables import precondition
+from repro.data.meshgen import two_tets
+from repro.kernels import ops
+
+ROOT = Path(__file__).resolve().parent.parent
+FIXTURES = ROOT / "tests" / "fixtures" / "contractcheck"
+SCAN_CFG = Config(exclude=())  # the fixtures are excluded by default
+
+# fixture file -> (the one checker it trips, exact violation lines)
+FIXTURE_EXPECT = {
+    "bad_shim.py": ("shim-discipline", {7, 12, 13}),
+    "bad_locks.py": ("lock-discipline", {18, 21, 24}),
+    "bad_blocking.py": ("blocking-under-lock", {17, 18}),
+    "bad_residency.py": ("device-residency", {12, 13}),
+    "bad_shard.py": ("shard-purity", {16, 17}),
+}
+
+
+# -- fixture liveness --------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(FIXTURE_EXPECT))
+def test_fixture_trips_exactly_its_checker(name):
+    checker_id, lines = FIXTURE_EXPECT[name]
+    vs = run_checks([FIXTURES / name], SCAN_CFG)
+    assert vs, f"{name} produced no violations"
+    assert {v.checker for v in vs} == {checker_id}
+    assert {v.line for v in vs} == lines
+    assert all(v.path.endswith(name) for v in vs)
+
+
+def test_every_checker_has_a_fixture():
+    covered = {checker for checker, _ in FIXTURE_EXPECT.values()}
+    assert covered == {c.id for c in CHECKERS}
+
+
+def test_fixtures_are_silent_for_every_other_checker():
+    # cross-product: fixture F run under only checker C != expected -> []
+    for name, (checker_id, _) in FIXTURE_EXPECT.items():
+        for c in CHECKERS:
+            if c.id == checker_id:
+                continue
+            vs = run_checks([FIXTURES / name], SCAN_CFG, checkers=[c])
+            assert vs == [], (name, c.id, [str(v) for v in vs])
+
+
+# -- the tree itself is the sixth fixture ------------------------------------
+
+def test_real_tree_is_clean():
+    vs = run_checks([ROOT / "src", ROOT / "tests", ROOT / "benchmarks"],
+                    Config())
+    assert vs == [], "\n".join(v.format() for v in vs)
+
+
+def test_default_config_excludes_fixtures():
+    assert run_checks([FIXTURES], Config()) == []
+
+
+# -- annotation mechanics ----------------------------------------------------
+
+def test_func_contract_above_decorator_and_inline_waiver():
+    src = textwrap.dedent("""\
+        import jax
+
+        # contract: device-resident
+        @jax.jit
+        def on_device(x):
+            return x
+
+        def helper(self):
+            with self._cond:
+                self._cond.wait()  # contract: syncer-handoff
+    """)
+    ctx = ModuleContext("m.py", src)
+    fns = {n.name: n for n in __import__("ast").walk(ctx.tree)
+           if hasattr(n, "name") and hasattr(n, "body")}
+    assert ctx.func_contracts(fns["on_device"]) == {"device-resident"}
+    assert ctx.func_contracts(fns["helper"]) == set()
+    wait_call = fns["helper"].body[0].body[0].value
+    assert ctx.waived(wait_call)
+
+
+def test_violation_fingerprint_and_formats():
+    v = Violation(path="a/b.py", line=3, checker="lock-discipline",
+                  message="boom", hint="fix it")
+    assert v.fingerprint == "a/b.py::lock-discipline::3"
+    assert "a/b.py:3" in v.format("text")
+    assert "fix it" in v.format("text")
+    assert v.format("github") == ("::error file=a/b.py,line=3,"
+                                  "title=contractcheck:lock-discipline"
+                                  "::boom")
+
+
+def test_parse_error_is_a_violation(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n", encoding="utf-8")
+    vs = run_checks([bad], SCAN_CFG)
+    assert [v.checker for v in vs] == ["parse-error"]
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def _cli(*args):
+    return subprocess.run(
+        [sys.executable, "tools/contractcheck.py", *args],
+        cwd=ROOT, capture_output=True, text=True)
+
+
+def test_cli_clean_path_exits_zero():
+    r = _cli("src/repro/analysis")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 violation(s)" in r.stdout
+
+
+def test_cli_fixture_exits_one_with_github_annotations():
+    r = _cli("tests/fixtures/contractcheck/bad_shim.py",
+             "--no-default-exclude", "--format=github")
+    assert r.returncode == 1
+    assert "::error file=" in r.stdout
+    assert "title=contractcheck:shim-discipline" in r.stdout
+
+
+def test_cli_baseline_suppresses_known_violations(tmp_path):
+    base = tmp_path / "baseline.txt"
+    target = "tests/fixtures/contractcheck/bad_blocking.py"
+    r = _cli(target, "--no-default-exclude",
+             "--baseline", str(base), "--write-baseline")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "wrote 2 fingerprint(s)" in r.stdout
+    r = _cli(target, "--no-default-exclude", "--baseline", str(base))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 violation(s) (2 suppressed by baseline)" in r.stdout
+
+
+def test_committed_baseline_is_empty():
+    # the CI gate greps for this too: violations are fixed, not suppressed
+    for line in (ROOT / "tools" / "contractcheck_baseline.txt"
+                 ).read_text(encoding="utf-8").splitlines():
+        assert not line.strip() or line.strip().startswith("#"), line
+
+
+# -- the invariant behind lock-discipline: re-entrancy now fails loudly ------
+
+def test_reentrant_consumer_call_raises(monkeypatch):
+    mesh = two_tets()
+    sm = segment_mesh(mesh, capacity=4)
+    pre = precondition(sm, relations=["VV"])
+    eng = RelationEngine(pre, ["VV"], lookahead=0)
+
+    real = ops.relation_block
+
+    def reenter(*a, **k):
+        # a consumer callback re-entering the engine on the producer path
+        # used to deadlock on the non-reentrant condition lock (§8)
+        eng.get("VV", 0)
+        return real(*a, **k)
+
+    monkeypatch.setattr(ops, "relation_block", reenter)
+    with pytest.raises(RuntimeError, match="re-entrant"):
+        eng.get("VV", 0)
+
+    # the guard resets on error: the engine stays usable afterwards
+    monkeypatch.setattr(ops, "relation_block", real)
+    M, L = eng.get("VV", 0)
+    assert L.shape[0] > 0

@@ -1,12 +1,11 @@
 """Pallas kernel validation: interpret-mode execution vs the pure-jnp
 oracle across shape/dtype/block sweeps, plus compaction invariants."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 
 def _rand_tables(rng, B, N, arity, nvl, fill=0.7):

@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""CLI for the contract linter (docs/DESIGN.md §11).
+
+    python tools/contractcheck.py [paths...] \
+        [--baseline tools/contractcheck_baseline.txt] \
+        [--format text|github] [--no-default-exclude] [--write-baseline]
+
+Exits 0 when every violation is suppressed by the baseline file (one
+``path::checker-id::line`` fingerprint per line, ``#`` comments allowed),
+1 otherwise. ``--format=github`` emits workflow error annotations so CI
+failures land on the offending line in the PR diff. ``--write-baseline``
+rewrites the baseline to the current violation set — the committed
+baseline is empty and the CI gate asserts it stays that way, so the flag
+exists for local triage only.
+
+Stdlib-only: runs in CI without jax installed.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.contractcheck import Config, run_checks  # noqa: E402
+
+
+def load_baseline(path: Path):
+    if not path.is_file():
+        return set()
+    out = set()
+    for line in path.read_text(encoding="utf-8").splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            out.add(line)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="contractcheck", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to scan (default: src tests "
+                         "benchmarks)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="suppression file of known-violation fingerprints")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite --baseline with the current violations")
+    ap.add_argument("--format", choices=("text", "github"), default="text",
+                    help="text (default) or github workflow annotations")
+    ap.add_argument("--no-default-exclude", action="store_true",
+                    help="also scan the known-bad fixture files (used by "
+                         "the test suite)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or ["src", "tests", "benchmarks"]
+    cfg = Config(exclude=()) if args.no_default_exclude else Config()
+    violations = run_checks(paths, cfg)
+
+    if args.write_baseline:
+        if args.baseline is None:
+            ap.error("--write-baseline requires --baseline")
+        lines = ["# contractcheck suppressions: path::checker-id::line",
+                 "# (the CI gate requires this file to stay empty)"]
+        lines += [v.fingerprint for v in violations]
+        args.baseline.write_text("\n".join(lines) + "\n", encoding="utf-8")
+        print(f"wrote {len(violations)} fingerprint(s) to {args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline else set()
+    fresh = [v for v in violations if v.fingerprint not in baseline]
+    suppressed = len(violations) - len(fresh)
+
+    for v in fresh:
+        print(v.format(args.format))
+    tail = f" ({suppressed} suppressed by baseline)" if suppressed else ""
+    print(f"contractcheck: {len(fresh)} violation(s){tail}")
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
