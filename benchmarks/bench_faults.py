@@ -1,0 +1,181 @@
+"""Fault-injected recovery benchmark (docs/DESIGN.md §12): drive a full
+driver run through each injected fault class — transient launch failures,
+permanent ones behind the circuit breaker's host arm, hung device syncs
+reclaimed by the watchdog, whole-shard device loss re-homed onto the
+survivor — and verify the output stays **bit-identical** to the fault-free
+baseline while reporting the recovery counters and the time the faults
+cost.
+
+Every row carries ``identical=`` (sha1 of the full output arrays vs the
+fault-free baseline) and ``recovered=`` (the scenario's own recovery
+criterion: retries absorbed / breaker probe closed / watchdog fired /
+shard re-homed). The CI chaos-smoke job greps both.
+
+When ``$REPRO_FAULT_SPEC`` is set an extra ``faults/env`` row runs the
+same driver under the environment-installed schedule (the CI job sets
+one), proving the env path end to end. The baseline always passes an
+explicit ``FaultPolicy()`` so it stays fault-free regardless.
+
+Machine-readable output: ``BENCH_faults.json`` at the repo root
+(``$BENCH_FAULTS_JSON`` overrides the path).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from repro.algorithms.critical_points import critical_points
+from repro.core.engine import RelationEngine
+from repro.core.faults import FaultInjector, FaultPolicy, FaultSpec
+
+from . import common
+from .bench_algorithms import CP_RELS
+
+_JSON_DEFAULT = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_faults.json")
+
+
+def _digest(*arrays) -> str:
+    h = hashlib.sha1()
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+def _run(eng, pre, rank):
+    t, _ = critical_points(eng, pre, rank, batch_segments=8, workers=2)
+    return _digest(t)
+
+
+def _scenarios(quick: bool) -> List[Dict]:
+    """(name, engine kwargs, policy, recovery criterion) per fault class.
+
+    The launch-shaping kwargs (``batch_max=1, lookahead=0``) on the
+    breaker scenario force one launch per segment so the injected
+    permanent failures are consecutive and actually trip the threshold."""
+    n_launch = 3 if quick else 6
+    return [
+        {
+            "name": "transient-launch",
+            "specs": [FaultSpec(kind="launch", relation="VV",
+                                count=n_launch)],
+            "policy": dict(backoff_s=0.001),
+            "engine": {},
+            "recovered": lambda s: s.retries >= n_launch
+            and s.failed_launches == 0,
+        },
+        {
+            "name": "degraded-breaker",
+            "specs": [FaultSpec(kind="launch", relation="VV",
+                                transient=False, count=n_launch)],
+            "policy": dict(breaker_threshold=2, breaker_cooldown_s=0.01),
+            "engine": dict(batch_max=1, lookahead=0),
+            "recovered": lambda s: s.breaker_trips >= 1
+            and s.breaker_recoveries >= 1 and s.degraded_launches >= 1,
+        },
+        {
+            "name": "hung-sync",
+            "specs": [FaultSpec(kind="sync", hang_s=5.0, count=1)],
+            "policy": dict(sync_timeout_s=0.05, sync_poll_s=0.005),
+            "engine": {},
+            "recovered": lambda s: s.sync_timeouts >= 1,
+        },
+        {
+            "name": "device-lost",
+            "specs": [FaultSpec(kind="device-lost", shard=0, count=1)],
+            "policy": {},
+            "engine": dict(shards=2),
+            "recovered": lambda s: s.shards_lost == 1
+            and s.rehomed_segments >= 1,
+        },
+    ]
+
+
+def _write_json(records: List[Dict], quick: bool) -> None:
+    path = os.environ.get("BENCH_FAULTS_JSON", _JSON_DEFAULT)
+    with open(path, "w") as fh:
+        json.dump({"suite": "faults", "quick": quick,
+                   "records": records}, fh, indent=1)
+
+
+def run(quick: bool = True) -> List[str]:
+    dataset = "fish" if quick else "stent"
+    sm, pre, rank, _ = common.prepare(dataset, CP_RELS)
+    rows: List[str] = []
+    records: List[Dict] = []
+
+    # fault-free baseline: explicit FaultPolicy() shields it from any
+    # $REPRO_FAULT_SPEC in the environment; second run is the timed one
+    # (first warms the jit caches every scenario then shares)
+    for _ in range(2):
+        base_eng = RelationEngine(pre, CP_RELS,
+                                  fault_policy=FaultPolicy())
+        t_base, sig0 = common.timed(_run, base_eng, pre, rank)
+    rows.append(common.row(f"faults/baseline/{dataset}", t_base,
+                           f"algo_s={t_base:.3f};baseline=True"))
+    records.append({"scenario": "baseline", "dataset": dataset,
+                    "t_algo": t_base, "signature": sig0})
+
+    for sc in _scenarios(quick):
+        injector = FaultInjector(sc["specs"], seed=0)
+        policy = FaultPolicy(injector=injector, **sc["policy"])
+        eng = RelationEngine(pre, CP_RELS, fault_policy=policy,
+                             **sc["engine"])
+        t, sig = common.timed(_run, eng, pre, rank)
+        s = eng.stats
+        ident = sig == sig0
+        recovered = bool(sc["recovered"](s)) and not eng._poisoned
+        derived = (f"algo_s={t:.3f};identical={ident};"
+                   f"recovered={recovered};"
+                   f"injected={len(injector.injected)};"
+                   f"retries={s.retries};degraded={s.degraded_segments};"
+                   f"breaker_trips={s.breaker_trips};"
+                   f"sync_timeouts={s.sync_timeouts};"
+                   f"rehomed={s.rehomed_segments};"
+                   f"overhead_x={t / t_base:.2f}")
+        rows.append(common.row(f"faults/{sc['name']}/{dataset}", t,
+                               derived))
+        records.append({
+            "scenario": sc["name"], "dataset": dataset, "t_algo": t,
+            "t_baseline": t_base, "signature": sig, "identical": ident,
+            "recovered": recovered, "injected": len(injector.injected),
+            "retries": s.retries, "sync_timeouts": s.sync_timeouts,
+            "failed_launches": s.failed_launches,
+            "breaker_trips": s.breaker_trips,
+            "breaker_recoveries": s.breaker_recoveries,
+            "degraded_launches": s.degraded_launches,
+            "degraded_segments": s.degraded_segments,
+            "shards_lost": s.shards_lost,
+            "rehomed_segments": s.rehomed_segments,
+        })
+
+    if os.environ.get("REPRO_FAULT_SPEC"):
+        # the environment-installed schedule (default policy = from_env)
+        eng = RelationEngine(pre, CP_RELS)
+        t, sig = common.timed(_run, eng, pre, rank)
+        s = eng.stats
+        ident = sig == sig0
+        inj = eng._injector
+        n_inj = len(inj.injected) if inj is not None else 0
+        recovered = ident and not eng._poisoned
+        rows.append(common.row(
+            f"faults/env/{dataset}", t,
+            f"algo_s={t:.3f};identical={ident};recovered={recovered};"
+            f"injected={n_inj};retries={s.retries};"
+            f"spec={os.environ['REPRO_FAULT_SPEC']!r}"))
+        records.append({"scenario": "env", "dataset": dataset,
+                        "t_algo": t, "signature": sig,
+                        "identical": ident, "recovered": recovered,
+                        "injected": n_inj,
+                        "spec": os.environ["REPRO_FAULT_SPEC"]})
+
+    _write_json(records, quick)
+    return rows

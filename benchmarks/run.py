@@ -30,7 +30,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: algorithms,scalability,waiting,"
                          "kernel_params,memory_scaling,adjacency,"
-                         "persistence")
+                         "persistence,faults")
     ap.add_argument("--datasets", default="",
                     help="comma list restricting the algorithms suite's "
                          "dataset pool (e.g. --datasets engine)")
@@ -43,9 +43,9 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (bench_adjacency, bench_algorithms,
-                            bench_kernel_params, bench_memory_scaling,
-                            bench_persistence, bench_scalability,
-                            bench_waiting)
+                            bench_faults, bench_kernel_params,
+                            bench_memory_scaling, bench_persistence,
+                            bench_scalability, bench_waiting)
 
     suites = {
         "algorithms": bench_algorithms,     # paper Figs. 7/8/9
@@ -55,6 +55,7 @@ def main() -> None:
         "memory_scaling": bench_memory_scaling,  # Figs. 7-9 memory bars
         "adjacency": bench_adjacency,       # batched vs scalar completion
         "persistence": bench_persistence,   # pairing vs reduction A/B
+        "faults": bench_faults,             # §12 recovery: identical=
     }
     print("name,us_per_call,derived")
     for name, mod in suites.items():

@@ -24,6 +24,13 @@ Annotation syntax (recognised anywhere, attached to the line it sits on):
     path of docs/DESIGN.md §8 (the condvar wait, and the device wait the
     syncer issues around an explicit release/re-acquire).
 
+``# contract: backoff-sleep``
+    Inline waiver on the retry backoff sleep of docs/DESIGN.md §12: the
+    engine's ``_backoff_sleep`` explicitly releases the lock around the
+    ``time.sleep`` (and re-filters its batch afterwards), so the sleep
+    never stalls other consumers. Any other sleep under the lock stays a
+    blocking-under-lock violation.
+
 ``# contract-scope: lock`` / ``# contract-scope: shard``
     Module-level opt-in: subject this file to the lock-discipline /
     shard-purity module sets even though it is not one of the configured
@@ -89,6 +96,9 @@ class Config:
         "queues", "cache", "store", "_dev_pool", "_inflight", "_flights",
         "stats", "worker_stats", "shard_stats", "_inv_shard",
         "pools", "_store", "_core", "_entries", "_arrays", "evictions",
+        # fault-recovery state (docs/DESIGN.md §12): breaker records,
+        # poisoned relations, lost shards, the store's shard->pool routes
+        "_breaker", "_poisoned", "_lost_shards", "_route",
     })
     # method names that mutate their receiver
     mutators: frozenset = frozenset({

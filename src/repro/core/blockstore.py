@@ -158,6 +158,17 @@ class DevBlockPool:
         self._arrays[aid][2].add(key)
         self._entries[key] = (aid, idx)
 
+    def clear(self) -> int:
+        # contract: holds-lock
+        """Drop every backing array and entry IN PLACE (the store routes
+        shards to pools by aliasable index, so the pool object must stay
+        identical). Returns the number of entries dropped. Used by the
+        upload-OOM recovery path and by shard re-homing (DESIGN.md §12)."""
+        n = len(self._entries)
+        self._arrays.clear()
+        self._entries.clear()
+        return n
+
     def __contains__(self, key) -> bool:
         return key in self._entries
 
@@ -182,6 +193,9 @@ class BlockStore:
         self.cache = SegmentCache(cache_segments)
         self.pools = [DevBlockPool(pool_arrays)
                       for _ in range(max(1, int(n_shards)))]
+        # shard -> pool index; re-homing a lost shard redirects its slot
+        # onto a survivor's pool (DESIGN.md §12)
+        self._route = list(range(len(self.pools)))
         self._shard_of = shard_of
 
     def shard_of(self, segment: int) -> int:
@@ -190,19 +204,36 @@ class BlockStore:
         return int(self._shard_of(segment))
 
     def pool(self, shard: int) -> DevBlockPool:
-        return self.pools[shard]
+        return self.pools[self._route[shard]]
+
+    def rehome(self, lost: int, target: int) -> int:
+        # contract: holds-lock
+        """Re-home shard ``lost``'s pool slot onto shard ``target``'s pool
+        after device loss (DESIGN.md §12): the lost pool's device-resident
+        blocks are unreachable, so they are dropped in place, and every
+        future ``get``/``put`` for the lost shard's segments routes to the
+        survivor's pool.  Returns the number of entries dropped."""
+        dropped = self.pools[self._route[lost]].clear()
+        self._route[lost] = self._route[target]
+        return dropped
+
+    def clear_shard(self, shard: int) -> int:
+        # contract: holds-lock
+        """Free one shard's device pool in place (upload-OOM recovery:
+        clear, then retry the upload once).  Returns entries dropped."""
+        return self.pools[self._route[shard]].clear()
 
     # -- DevBlockPool surface, shard-routed --------------------------------
     def get(self, key):
         # contract: holds-lock
-        return self.pools[self.shard_of(key[1])].get(key)
+        return self.pool(self.shard_of(key[1])).get(key)
 
     def put(self, key, M, L, idx) -> None:
         # contract: holds-lock
-        self.pools[self.shard_of(key[1])].put(key, M, L, idx)
+        self.pool(self.shard_of(key[1])).put(key, M, L, idx)
 
     def __contains__(self, key) -> bool:
-        return key in self.pools[self.shard_of(key[1])]
+        return key in self.pool(self.shard_of(key[1]))
 
     def __len__(self) -> int:
         return sum(len(p) for p in self.pools)

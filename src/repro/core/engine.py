@@ -79,8 +79,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..distributed.sharding import ShardPlan
+from ..errors import (
+    DeviceLostError,
+    PoolUploadError,
+    RelationError,
+    RelationPoisonedError,
+    RelationWidthError,
+    SyncTimeoutError,
+)
 from ..kernels import ops
 from .blockstore import BlockStore, DevBlockPool, SegmentCache
+from .faults import FaultPolicy
 from .segtables import (
     OFFLOADED_RELATIONS,
     Preconditioned,
@@ -118,6 +127,23 @@ class EngineStats:
     # resident launch results vs host-cache blocks re-uploaded to device.
     devpool_hits: int = 0
     devpool_uploads: int = 0
+    # Fault recovery (docs/DESIGN.md §12). ``retries`` counts launch AND
+    # sync re-attempts; ``failed_*`` counts launches abandoned after a
+    # fault (their dispatch-time ``kernel_launches``/``segments_produced``
+    # bumps are reversed, so "produced == distinct blocks" still holds);
+    # ``degraded_*`` counts host-arm production/reads while a relation's
+    # circuit breaker is open.
+    retries: int = 0
+    sync_timeouts: int = 0
+    failed_launches: int = 0
+    failed_segments: int = 0
+    breaker_trips: int = 0
+    breaker_recoveries: int = 0
+    degraded_launches: int = 0
+    degraded_segments: int = 0
+    degraded_reads: int = 0
+    shards_lost: int = 0
+    rehomed_segments: int = 0
     # Cross-segment adjacency completion (core/adjacency.py).
     completion_queries: int = 0        # simplex ids completed
     completion_fanout_blocks: int = 0  # block consultations (see docstring)
@@ -257,11 +283,10 @@ class StatsHost:
                 self.shard_stats[k] for k in sorted(self.shard_stats))
 
 
-class RelationWidthError(ValueError):
-    """A produced relation row holds more entries than the preallocated
-    relation-array width ``deg[relation]`` (paper §4.6): the compacted ``M``
-    row would silently drop neighbours. Raised by
-    :meth:`RelationEngine._integrate` with the ``deg=`` override to use."""
+# RelationWidthError historically lived here; it moved into the structured
+# error taxonomy (src/repro/errors.py, docs/DESIGN.md §12) and stays
+# importable from this module — it is re-exported by the import block above.
+assert issubclass(RelationWidthError, ValueError)
 
 
 # The block-storage layer (host segment cache + launch-granularity device
@@ -321,9 +346,11 @@ class _Launch:
     """One dispatched batched kernel whose results may not be ready yet."""
 
     __slots__ = ("relation", "segments", "M", "L", "n_rows", "done",
-                 "syncing")
+                 "syncing", "shard", "host", "error", "hang_until",
+                 "sync_attempts")
 
-    def __init__(self, relation, segments, M, L, n_rows):
+    def __init__(self, relation, segments, M, L, n_rows, shard=0,
+                 host=False):
         self.relation = relation
         self.segments = segments      # real (unpadded) segment ids
         self.M = M                    # (B_padded, R, deg) device array
@@ -331,8 +358,15 @@ class _Launch:
         self.n_rows = n_rows          # per-segment internal row counts
         self.done = False
         self.syncing = False          # a consumer thread owns the sync wait
+        self.shard = shard            # owning segment shard (stats, re-home)
+        self.host = host              # degraded host-arm launch (not pooled)
+        self.error = None             # terminal fault (docs/DESIGN.md §12)
+        self.hang_until = 0.0         # injected sync hang deadline (faults)
+        self.sync_attempts = 0        # watchdog timeouts consumed so far
 
     def is_ready(self) -> bool:
+        if self.hang_until and time.monotonic() < self.hang_until:
+            return False              # injected hang: results stay un-ready
         try:
             return self.M.is_ready() and self.L.is_ready()
         except AttributeError:  # pragma: no cover - very old jax
@@ -362,9 +396,28 @@ class RelationEngine(StatsHost):
         dev_pool_segments: int = 256,
         shards: int = 1,
         shard_plan: Optional[ShardPlan] = None,
+        fault_policy: Optional[FaultPolicy] = None,
+        sync_timeout_s: Optional[float] = None,
     ):
         if pre.tables is None:
             raise ValueError("precondition(..., build_tables=True) required")
+        # Fault-recovery policy (docs/DESIGN.md §12): defaults come from
+        # $REPRO_FAULT_SPEC (CI chaos jobs) when no explicit policy is
+        # passed; sync_timeout_s= overrides the policy's watchdog knob.
+        if fault_policy is None:
+            fault_policy = FaultPolicy.from_env()
+        if sync_timeout_s is not None:
+            fault_policy = dataclasses.replace(
+                fault_policy, sync_timeout_s=float(sync_timeout_s))
+        self._fault_policy = fault_policy
+        self._injector = fault_policy.injector
+        # per-relation circuit breaker: consecutive device-arm failures,
+        # open-until deadline, and the last fault (docs/DESIGN.md §12)
+        self._breaker: Dict[str, Dict] = {}
+        # relations that permanently failed under degrade=False: every
+        # later consumer call raises RelationPoisonedError immediately
+        self._poisoned: Dict[str, BaseException] = {}
+        self._lost_shards: set = set()
         self.pre = pre
         self.smesh = pre.smesh
         self.tables = pre.tables
@@ -430,27 +483,11 @@ class RelationEngine(StatsHost):
         # initialized arrays to GPU global memory). Sharded engines slice the
         # stacked tables per shard — each device holds only its own
         # segments' rows, indexed by shard-local segment id (docs §9).
-        t = self.tables
-        self._shard_tables: List[Dict[str, jnp.ndarray]] = []
-        for k in range(self.n_shards):
-            lo, hi = shard_plan.shard_bounds(k)
-            dev = shard_plan.devices[k] if self._multi_dev else None
-            if dev is not None:
-                put = (lambda a, d=dev, lo=lo, hi=hi:
-                       jax.device_put(np.ascontiguousarray(a[lo:hi]), d))
-            else:
-                put = (lambda a, lo=lo, hi=hi: jnp.asarray(a[lo:hi]))
-            tabs: Dict[str, jnp.ndarray] = {}
-            tabs["T_local"] = put(t.T_local)
-            tabs["LT_global"] = put(t.LT_global)
-            tabs["LV_global"] = put(t.LV_global)
-            if t.E_local is not None:
-                tabs["E_local"] = put(t.E_local)
-                tabs["LE_global"] = put(t.LE_global)
-            if t.F_local is not None:
-                tabs["F_local"] = put(t.F_local)
-                tabs["LF_global"] = put(t.LF_global)
-            self._shard_tables.append(tabs)
+        self._shard_tables: List[Dict[str, jnp.ndarray]] = [
+            self._stage_shard_tables(*shard_plan.shard_bounds(k),
+                                     shard_plan.devices[k]
+                                     if self._multi_dev else None)
+            for k in range(self.n_shards)]
         # legacy single-device view: with one shard the full tables double as
         # shard 0's slice (same arrays); sharded engines keep only the
         # inverse maps here
@@ -467,6 +504,7 @@ class RelationEngine(StatsHost):
         # combined key ``seg * n_global + gid`` fits i32 it is additionally
         # staged as ``inv_key_*`` so the xla oracle is one jnp.searchsorted.
         self._inv_nglob: Dict[str, int] = {}
+        t = self.tables
         if t.inverse:
             for kind, (keys, rows, n_glob) in t.inverse.items():
                 if kind == "V":   # completion only spans E/F/T kinds
@@ -480,6 +518,30 @@ class RelationEngine(StatsHost):
                 if len(keys) == 0 or int(keys[-1]) < 2 ** 31:
                     self._dev[f"inv_key_{kind}"] = jnp.asarray(
                         keys.astype(np.int32))
+
+    def _stage_shard_tables(self, lo: int, hi: int, dev
+                            ) -> Dict[str, jnp.ndarray]:
+        """Stage one shard's sliced tables onto ``dev`` (``None`` = default
+        placement). Used at construction for every shard and again by
+        :meth:`_rehome_shard` to move a lost shard's slice onto a surviving
+        device (docs/DESIGN.md §12)."""
+        t = self.tables
+        if dev is not None:
+            put = (lambda a: jax.device_put(
+                np.ascontiguousarray(a[lo:hi]), dev))
+        else:
+            put = (lambda a: jnp.asarray(a[lo:hi]))
+        tabs: Dict[str, jnp.ndarray] = {}
+        tabs["T_local"] = put(t.T_local)
+        tabs["LT_global"] = put(t.LT_global)
+        tabs["LV_global"] = put(t.LV_global)
+        if t.E_local is not None:
+            tabs["E_local"] = put(t.E_local)
+            tabs["LE_global"] = put(t.LE_global)
+        if t.F_local is not None:
+            tabs["F_local"] = put(t.F_local)
+            tabs["LF_global"] = put(t.LF_global)
+        return tabs
 
     # -- consumer-side API --------------------------------------------------
 
@@ -524,6 +586,7 @@ class RelationEngine(StatsHost):
 
     def _request(self, relation: str, segments: Sequence[int]) -> None:
         # contract: holds-lock
+        self._check_poisoned(relation)
         t0 = time.perf_counter()
         q = self.queues[relation]
         qs = set(q)
@@ -656,6 +719,7 @@ class RelationEngine(StatsHost):
         """Pooled device block entry ``(M, L, idx_or_None)`` for one
         segment, producing/uploading on miss (shared by get_full_dev and
         get_full_dev_batch; one request count per call). Lock held."""
+        self._check_poisoned(relation)
         self._bump(requests=1)
         self._count(relation, segment)
         key = (relation, segment)
@@ -673,6 +737,25 @@ class RelationEngine(StatsHost):
             # device pool — re-check before paying a host->device upload
             ent = self._dev_pool.get(key)
             if ent is None:
+                pooled = True
+                if self._injector is not None \
+                        and self._injector.upload_fault(relation, segment,
+                                                        shard):
+                    # injected pool-upload OOM: drop every entry of this
+                    # shard's pool (the standard OOM response — free, then
+                    # retry once); a second failure serves the read
+                    # un-pooled (degraded), or raises under degrade=False
+                    self._dev_pool.clear_shard(shard)
+                    if self._injector.upload_fault(relation, segment,
+                                                   shard):
+                        if not self._fault_policy.degrade:
+                            raise PoolUploadError(
+                                f"device block-pool upload failed twice "
+                                f"for relation {relation!r}",
+                                relation=relation, segment=segment,
+                                shard=shard)
+                        self._bump(degraded_reads=1)
+                        pooled = False
                 # uploads land on the segment's owning shard device, so the
                 # per-shard pool really bounds that device's memory
                 if self._multi_dev:
@@ -681,7 +764,8 @@ class RelationEngine(StatsHost):
                            None)
                 else:
                     ent = (jnp.asarray(Mh), jnp.asarray(Lh), None)
-                self._dev_pool.put(key, *ent)
+                if pooled:
+                    self._dev_pool.put(key, *ent)
                 self._bump(devpool_uploads=1)
                 self._bump_shard(shard, devpool_uploads=1)
                 return ent
@@ -744,16 +828,48 @@ class RelationEngine(StatsHost):
         gid_dev = jnp.asarray(gid_pad.astype(np.int32))
 
         # producer interaction under the lock: prefetch + pool-entry
-        # resolution (which may sync in-flight launches)
+        # resolution (which may sync in-flight launches). Relations whose
+        # circuit breaker is OPEN (docs/DESIGN.md §12) bypass the device
+        # pool entirely: their blocks are read from the host cache
+        # (degraded_reads) and assembled without touching the device arm.
         with self._consumer_entry("get_full_dev_many"):
-            self._prefetch_many({r: segments for r in relations})
+            live = [r for r in relations if self._device_arm_ok(r)]
+            if live:
+                self._prefetch_many({r: segments for r in live})
             ents_by_rel = {r: [self._dev_entry(r, s) for s in segments]
-                           for r in relations}
+                           for r in live}
+            host_by_rel: Dict[str, list] = {}
+            for r in relations:
+                if r in ents_by_rel:
+                    continue
+                blocks = []
+                for s in segments:
+                    self._bump(requests=1, degraded_reads=1)
+                    self._count(r, s)
+                    blocks.append(self._fetch(r, s, full=True))
+                host_by_rel[r] = blocks
 
         # the gathers run on held array references — outside the lock
         M: Dict[str, jnp.ndarray] = {}
         L: Dict[str, jnp.ndarray] = {}
         for r in relations:
+            if r in host_by_rel:
+                # degraded read: assemble the internal rows on the host in
+                # exactly _gather_internal's layout (-1/0 bucket padding,
+                # columns trimmed to w) and upload once — bit-identical to
+                # the pooled gather output
+                w = self.deg[r]
+                if cols and r in cols:
+                    w = min(w, max(int(cols[r]), 1))
+                Mh = np.full((rows_pad, w), -1, dtype=np.int32)
+                Lh = np.zeros(rows_pad, dtype=np.int32)
+                at = 0
+                for (Mb, Lb), n in zip(host_by_rel[r], ns_rows):
+                    Mh[at:at + n] = Mb[:n, :w]
+                    Lh[at:at + n] = Lb[:n]
+                    at += n
+                M[r], L[r] = jnp.asarray(Mh), jnp.asarray(Lh)
+                continue
             # fast path: every segment's block lives in ONE retained launch
             # (the common steady state) — a single fused gather straight off
             # the launch array, no per-segment slicing or stacking
@@ -897,6 +1013,7 @@ class RelationEngine(StatsHost):
         else queue-jump + dispatch + sync. Used by get()/get_full()/
         get_batch(); ``full`` keeps external + padding rows. Lock held
         (only :meth:`_sync` may release it while waiting on the device)."""
+        self._check_poisoned(relation)
         key = (relation, segment)
         while True:
             hit = self.cache.get(key)
@@ -977,34 +1094,235 @@ class RelationEngine(StatsHost):
         ``t_sync`` (so per-worker sync time reflects real consumer stalls).
         If the syncer fails before integrating (e.g. the launch overflows
         ``deg[relation]`` — :class:`RelationWidthError`), a waiter takes
-        over and surfaces the same error instead of hanging."""
-        if launch.done:
+        over and surfaces the same error instead of hanging.
+
+        Sync watchdog (docs/DESIGN.md §12): with ``sync_timeout_s`` set,
+        the syncer's device wait is a bounded poll; a launch that fails to
+        become ready within the window costs one ``sync_timeouts`` and is
+        re-waited up to ``max_attempts`` times, after which the launch is
+        FAILED (:meth:`_fail_launch`): waiters wake immediately instead of
+        hanging on the condvar, the breaker records the failure, and
+        callers re-dispatch the segments (degrading to the host arm once
+        the breaker opens)."""
+        if launch.done or launch.error is not None:
             return
         t0 = time.perf_counter()
         if launch.syncing:
-            while launch.syncing and not launch.done:
+            while launch.syncing and not launch.done \
+                    and launch.error is None:
                 self._cond.wait()   # contract: syncer-handoff
+            if launch.error is not None:
+                # the syncer failed the launch (watchdog / device loss):
+                # account the wait and let the caller re-dispatch
+                self._bump(t_sync=time.perf_counter() - t0)
+                return
             if not launch.done:       # syncer failed: take over the sync
                 return self._sync(launch)
             self._bump(t_sync=time.perf_counter() - t0)
             return
         launch.syncing = True
-        self._cond.release()
         try:
-            # the ONE device wait that runs lock-free (released above,
-            # re-acquired below)  # contract: syncer-handoff
-            jax.block_until_ready((launch.M, launch.L))
+            while True:
+                self._cond.release()
+                try:
+                    # the ONE device wait that runs lock-free (released
+                    # above, re-acquired below)  # contract: syncer-handoff
+                    try:
+                        self._device_wait(launch)
+                        timed_out = None
+                    except SyncTimeoutError as exc:
+                        timed_out = exc
+                finally:
+                    self._cond.acquire()
+                if timed_out is None:
+                    break
+                self._bump(sync_timeouts=1)
+                launch.sync_attempts += 1
+                if launch.error is not None:
+                    break             # failed meanwhile (shard loss)
+                if launch.sync_attempts >= self._fault_policy.max_attempts:
+                    self._fail_launch(launch, timed_out)
+                    self._breaker_failure(launch.relation, timed_out)
+                    self._bump(t_sync=time.perf_counter() - t0)
+                    return
+                self._bump(retries=1)
         finally:
-            self._cond.acquire()
             launch.syncing = False
             self._cond.notify_all()
         self._bump(t_sync=time.perf_counter() - t0)
-        self._integrate(launch)
+        if launch.error is None:
+            self._integrate(launch)
         self._cond.notify_all()
+
+    def _device_wait(self, launch: _Launch) -> None:
+        """Device wait for one launch, called by the syncer with the engine
+        lock RELEASED (lock-free: this helper never touches shared engine
+        state). With no ``sync_timeout_s`` this is the plain blocking wait;
+        with the watchdog armed it polls readiness and raises
+        :class:`SyncTimeoutError` when the window expires."""
+        timeout = self._fault_policy.sync_timeout_s
+        if timeout is None:
+            jax.block_until_ready((launch.M, launch.L))
+            wait = launch.hang_until - time.monotonic()
+            if wait > 0:              # injected hang, no watchdog armed
+                time.sleep(wait)
+            return
+        deadline = time.monotonic() + timeout
+        poll = max(float(self._fault_policy.sync_poll_s), 1e-4)
+        while True:
+            if launch.is_ready():
+                jax.block_until_ready((launch.M, launch.L))
+                return
+            if time.monotonic() >= deadline:
+                raise SyncTimeoutError(
+                    f"launch for relation {launch.relation!r} not ready "
+                    f"after {timeout}s (segments {list(launch.segments)!r})",
+                    timeout_s=timeout, relation=launch.relation,
+                    segment=launch.segments[0] if launch.segments else None,
+                    shard=launch.shard,
+                    attempt=launch.sync_attempts + 1)
+            time.sleep(poll)
+
+    def _fail_launch(self, launch: _Launch, exc: BaseException) -> None:
+        # contract: holds-lock
+        """Abandon a dispatched launch after a terminal fault: record the
+        error (waking condvar waiters), deregister its segments from the
+        in-flight table so they can re-dispatch, and reverse the
+        dispatch-time production counters — ``segments_produced`` keeps
+        meaning "distinct blocks actually produced". Idempotent."""
+        if launch.done or launch.error is not None:
+            return
+        launch.error = exc
+        for s in launch.segments:
+            if self._inflight.get((launch.relation, s)) is launch:
+                self._inflight.pop((launch.relation, s))
+        try:
+            self._flights.remove(launch)
+        except ValueError:
+            pass
+        n = len(launch.segments)
+        self._bump(failed_launches=1, failed_segments=n,
+                   kernel_launches=-1, segments_produced=-n)
+        self._bump_shard(launch.shard, failed_launches=1, failed_segments=n,
+                         kernel_launches=-1, segments_produced=-n)
+        self._cond.notify_all()
+
+    # -- per-relation circuit breaker (docs/DESIGN.md §12) -------------------
+
+    def _breaker_failure(self, relation: str, exc: BaseException) -> None:
+        # contract: holds-lock
+        """Record one device-arm failure; after ``breaker_threshold``
+        consecutive failures the breaker OPENS: production and
+        ``get_full_dev_many`` reads degrade to the host arm until the
+        cooldown expires (then one launch probes the device arm again).
+        A failure while open re-arms the cooldown."""
+        b = self._breaker.setdefault(
+            relation, {"failures": 0, "open": False, "open_until": 0.0,
+                       "exc": None})
+        b["failures"] += 1
+        b["exc"] = exc
+        if b["open"]:
+            b["open_until"] = (time.monotonic()
+                               + self._fault_policy.breaker_cooldown_s)
+        elif b["failures"] >= self._fault_policy.breaker_threshold:
+            b["open"] = True
+            b["open_until"] = (time.monotonic()
+                               + self._fault_policy.breaker_cooldown_s)
+            self._bump(breaker_trips=1)
+
+    def _breaker_success(self, relation: str) -> None:
+        # contract: holds-lock
+        """A device-arm launch succeeded: reset the consecutive-failure
+        count; if the breaker was open this was the cooldown probe — close
+        it (``breaker_recoveries``) and return reads to the device arm."""
+        b = self._breaker.get(relation)
+        if b is None:
+            return
+        if b["open"]:
+            b["open"] = False
+            self._bump(breaker_recoveries=1)
+        b["failures"] = 0
+
+    def _device_arm_ok(self, relation: str) -> bool:
+        # contract: holds-lock
+        """True when the device arm may be tried: breaker closed, or open
+        with an expired cooldown (the probe window)."""
+        b = self._breaker.get(relation)
+        if b is None or not b["open"]:
+            return True
+        return time.monotonic() >= b["open_until"]
+
+    def _poison(self, relation: str, exc: BaseException) -> None:
+        # contract: holds-lock
+        if relation not in self._poisoned:
+            self._poisoned[relation] = exc
+
+    def _check_poisoned(self, relation: str) -> None:
+        # contract: holds-lock
+        exc = self._poisoned.get(relation)
+        if exc is not None:
+            raise RelationPoisonedError(
+                f"relation {relation!r} permanently failed earlier "
+                f"(fault_policy.degrade is off); the engine cannot serve "
+                f"it", relation=relation) from exc
+
+    def _backoff_sleep(self, attempt: int) -> None:
+        # contract: holds-lock
+        """Exponential backoff between launch retry attempts. The sleep
+        itself runs with the engine lock RELEASED — sleeping under the lock
+        would stall every consumer thread (§8 blocking-under-lock
+        contract); the caller re-filters its batch against cache +
+        in-flight after the gap, so the de-dup guarantee survives the
+        window."""
+        delay = float(self._fault_policy.backoff_s) * (
+            float(self._fault_policy.backoff_factor) ** max(attempt - 1, 0))
+        if delay <= 0:
+            return
+        self._cond.release()
+        try:
+            # lock released above, re-acquired below
+            time.sleep(delay)   # contract: backoff-sleep
+        finally:
+            self._cond.acquire()
+
+    def _rehome_shard(self, lost: int, exc: BaseException) -> bool:
+        # contract: holds-lock
+        """Whole-shard device loss (docs/DESIGN.md §12): re-home the lost
+        shard onto the first surviving shard — fail its un-synced flights
+        (their device arrays are gone), drop + re-route its device pool
+        through :meth:`BlockStore.rehome`, re-stage its table slice on the
+        survivor's device, and point its ``ShardPlan`` slot there. Segment
+        *attribution* (``_seg_shard``, per-shard stats) stays logical, so
+        the per-shard production partition is untouched. Returns ``False``
+        when no surviving shard exists (single-shard engines degrade to
+        the host arm instead)."""
+        if lost in self._lost_shards:
+            return True               # already re-homed; retry proceeds
+        survivors = [k for k in range(self.n_shards)
+                     if k != lost and k not in self._lost_shards]
+        if not survivors:
+            return False
+        target = survivors[0]
+        self._lost_shards.add(lost)
+        for launch in list(self._flights):
+            if launch.shard == lost and not launch.done:
+                self._fail_launch(launch, exc)
+        self.store.rehome(lost, target)
+        dev = (self.shard_plan.devices[target] if self._multi_dev else None)
+        lo, hi = self.shard_plan.shard_bounds(lost)
+        self._shard_tables[lost] = self._stage_shard_tables(lo, hi, dev)
+        self.shard_plan = self.shard_plan.rehomed(lost, target)
+        # drop the lost shard's lazily staged inverse-map replicas so the
+        # next sharded resolve re-stages them on the new device
+        for key in [k for k in self._inv_shard if k[1] == lost]:
+            self._inv_shard.pop(key)
+        self._bump(shards_lost=1, rehomed_segments=hi - lo)
+        self._cond.notify_all()
+        return True
 
     def _integrate(self, launch: _Launch) -> None:
         # contract: holds-lock
-        if launch.done:
+        if launch.done or launch.error is not None:
             return
         t0 = time.perf_counter()
         # One host copy per launch while the results are known-ready. Cached
@@ -1033,8 +1351,13 @@ class RelationEngine(StatsHost):
             self.cache.put((launch.relation, s),
                            (Mh[i], Lh[i], launch.n_rows[i]))
             # device pool: keep the still-device-resident rows addressable
-            # for get_full_dev (holds a reference to the launch arrays)
-            self._dev_pool.put((launch.relation, s), launch.M, launch.L, i)
+            # for get_full_dev (holds a reference to the launch arrays).
+            # Degraded host-arm launches hold numpy arrays — never pooled;
+            # device reads of their blocks go through the counted upload
+            # path in _dev_entry instead.
+            if not launch.host:
+                self._dev_pool.put((launch.relation, s),
+                                   launch.M, launch.L, i)
         launch.done = True
         self._bump(evictions=self.cache.evictions - self.stats.evictions,
                    t_integrate=time.perf_counter() - t0)
@@ -1109,6 +1432,93 @@ class RelationEngine(StatsHost):
             # requeued so proactive production continues in later launches
             qs = set(q)
             q.extend(s for s in look[room:] if s not in qs)
+        self._bump(t_prepare=time.perf_counter() - t0)
+        return self._launch(relation, batch, shard)
+
+    def _launch(self, relation: str, batch: List[int], shard: int
+                ) -> Optional[_Launch]:
+        # contract: holds-lock
+        """Produce one drained batch through the §12 recovery ladder:
+
+        1. breaker OPEN (cooldown running) -> host arm immediately;
+        2. device arm; an injected/structured :class:`RelationError` feeds
+           the breaker, and a *transient* one retries up to
+           ``max_attempts`` with exponential backoff — the backoff sleeps
+           with the lock RELEASED, and the batch is re-filtered against
+           cache + in-flight afterwards so a segment is never produced
+           twice even if another thread produced it during the gap;
+        3. :class:`DeviceLostError` re-homes the shard (surviving shards'
+           device + pool) and retries there;
+        4. exhausted/permanent -> host arm (``degrade=True``, the default)
+           or poison the relation and raise (``degrade=False``).
+
+        Only :class:`RelationError` subclasses enter the ladder —
+        :class:`RelationWidthError` (a data error, identical on every arm)
+        and non-taxonomy exceptions propagate unchanged."""
+        policy = self._fault_policy
+        attempt = 1
+        while True:
+            if not self._device_arm_ok(relation):
+                if policy.degrade:
+                    return self._launch_host(relation, batch, shard)
+                b = self._breaker.get(relation) or {}
+                self._poison(relation, b.get("exc") or RelationError(
+                    "circuit breaker open", relation=relation, shard=shard))
+                self._check_poisoned(relation)
+            try:
+                launch = self._launch_device(relation, batch, shard,
+                                             attempt)
+            except RelationWidthError:
+                raise                 # data error: identical on every arm
+            except RelationError as exc:
+                if isinstance(exc, DeviceLostError) \
+                        and attempt < policy.max_attempts \
+                        and self._rehome_shard(shard, exc):
+                    self._bump(retries=1)
+                    attempt += 1
+                    continue
+                self._breaker_failure(relation, exc)
+                transient = (getattr(exc, "transient", False)
+                             and not isinstance(exc, DeviceLostError))
+                if transient and attempt < policy.max_attempts:
+                    self._bump(retries=1)
+                    attempt += 1
+                    self._backoff_sleep(attempt - 1)
+                    # the backoff gap ran with the lock released: another
+                    # thread may have produced part of the batch meanwhile
+                    batch = self._refilter(relation, batch)
+                    if not batch:
+                        return None
+                    continue
+                if policy.degrade:
+                    return self._launch_host(relation, batch, shard)
+                self._poison(relation, exc)
+                raise
+            if launch is not None and launch.error is None:
+                self._breaker_success(relation)
+            return launch
+
+    def _refilter(self, relation: str, batch: List[int]) -> List[int]:
+        # contract: holds-lock
+        """De-dup a retry batch against cache + in-flight after a window
+        in which the lock was released (backoff sleep)."""
+        return [s for s in batch
+                if (relation, s) not in self.cache
+                and (relation, s) not in self._inflight]
+
+    def _launch_device(self, relation: str, batch: List[int], shard: int,
+                       attempt: int) -> _Launch:
+        # contract: holds-lock
+        """One device-arm kernel launch (the pre-§12 ``_dispatch`` tail):
+        pad to the power-of-two bucket, slice the shard's tables, dispatch
+        the fused kernel, and register the in-flight launch. Injected
+        faults surface here as :class:`RelationError` subclasses."""
+        if self._injector is not None:
+            exc = self._injector.launch_fault(relation, batch, attempt,
+                                              shard)
+            if exc is not None:
+                raise exc
+        t0 = time.perf_counter()
         # pad the launch to a power-of-two bucket (duplicating the last
         # segment) so jit sees O(log batch_max) shapes, not one per drain
         b_pad = ops.bucket_rows(len(batch))
@@ -1142,7 +1552,12 @@ class RelationEngine(StatsHost):
 
         n_int, _ = self.tables.counts(kx if relation != "VV" else "V")
         launch = _Launch(relation, batch, M, L,
-                         [int(n_int[s]) for s in batch])
+                         [int(n_int[s]) for s in batch], shard=shard)
+        if self._injector is not None:
+            hang = self._injector.sync_hang_s(relation, batch, attempt,
+                                              shard)
+            if hang > 0:
+                launch.hang_until = time.monotonic() + hang
         for s in batch:
             self._inflight[(relation, s)] = launch
         self._flights.append(launch)
@@ -1157,6 +1572,56 @@ class RelationEngine(StatsHost):
             if len(self._flights) > self.inflight_max:
                 self._sync(self._flights.popleft())
         return launch
+
+    def _launch_host(self, relation: str, batch: List[int], shard: int
+                     ) -> _Launch:
+        # contract: holds-lock
+        """Degraded production on the HOST arm (docs/DESIGN.md §12): the
+        numpy mirror kernel (:func:`ops.relation_block_host`) computes the
+        batch bit-identically to the device arms; results integrate into
+        the host cache immediately (nothing to sync) and the
+        ``degraded_*`` counters record the detour. Host launches are never
+        device-pooled — device reads of their blocks go through the
+        counted upload path."""
+        t0 = time.perf_counter()
+        t = self.tables
+        kx, ky = RELATION_TABLES[relation]
+        segs = np.asarray(batch, dtype=np.intp)
+        if relation == "VV":
+            tabX = tabY = t.T_local[segs]
+            colg = t.LV_global[segs]
+        else:
+            tabX = self._table_host(kx, segs)
+            tabY = self._table_host(ky, segs)
+            colg = getattr(t, _GLOBAL_NAME[ky])[segs]
+        Mh, Lh = ops.relation_block_host(relation, tabX, tabY, colg,
+                                         t.NV, deg=self.deg[relation])
+        dt = time.perf_counter() - t0
+        n = len(batch)
+        self._bump(t_kernel=dt, kernel_launches=1, segments_produced=n,
+                   degraded_launches=1, degraded_segments=n)
+        self._bump_shard(shard, t_kernel=dt, kernel_launches=1,
+                         segments_produced=n, degraded_launches=1,
+                         degraded_segments=n)
+        n_int, _ = t.counts(kx if relation != "VV" else "V")
+        launch = _Launch(relation, batch, Mh, Lh,
+                         [int(n_int[s]) for s in batch], shard=shard,
+                         host=True)
+        for s in batch:
+            self._inflight[(relation, s)] = launch
+        self._integrate(launch)
+        return launch
+
+    def _table_host(self, kind: str, segs: np.ndarray) -> np.ndarray:
+        # contract: holds-lock
+        """Host mirror of :meth:`_table_dev` over the full (unsliced) host
+        tables; ``segs`` are GLOBAL segment ids."""
+        if kind == "V":
+            lv = self.tables.LV_global[segs]
+            iota = np.arange(self.tables.NV, dtype=np.int32)
+            return np.where(lv >= 0, iota[None, :], -1)[..., None]
+        name = {"E": "E_local", "F": "F_local", "T": "T_local"}[kind]
+        return getattr(self.tables, name)[segs]
 
     def _table_dev(self, kind: str, segs: jnp.ndarray,
                    tabs: Dict[str, jnp.ndarray]) -> jnp.ndarray:

@@ -180,6 +180,9 @@ def run_partitioned(
     Error contract: the first worker exception (lowest item index) is
     re-raised here after all workers stopped; remaining workers abort at
     their next item boundary, so a raising worker can never hang the pool.
+    The ORIGINAL exception object is re-raised (its worker-thread traceback
+    chains through), with the failing worker id and batch index appended to
+    the message (``[<name>: worker wN failed at batch I]``).
     """
     n = len(items)
     if n == 0:
@@ -206,7 +209,7 @@ def run_partitioned(
         return
 
     results: List = [_PENDING] * n
-    errors: List = []            # (item index, exception)
+    errors: List = []            # (item index, worker index, exception)
     cond = threading.Condition()
     abort = threading.Event()
 
@@ -215,9 +218,9 @@ def run_partitioned(
             results[i] = res
             cond.notify_all()
 
-    def fail(i, exc) -> None:
+    def fail(i, widx, exc) -> None:
         with cond:
-            errors.append((i, exc))
+            errors.append((i, widx, exc))
             abort.set()
             cond.notify_all()
 
@@ -246,7 +249,7 @@ def run_partitioned(
                     at = pi
                     post(pi, finalize(pinter) if finalize else pinter)
             except BaseException as exc:  # propagate, never hang the pool
-                fail(at if at >= 0 else share[0], exc)
+                fail(at if at >= 0 else share[0], widx, exc)
 
     threads = [
         threading.Thread(target=work, args=(w, share), daemon=True,
@@ -283,5 +286,15 @@ def run_partitioned(
             t.join()
 
     if errors:
+        # re-raise the ORIGINAL exception object (worker traceback intact),
+        # annotated with the failing worker id and batch index — "worker
+        # exceptions are anonymous" was the hardest scheduler bug to debug
         errors.sort(key=lambda e: e[0])
-        raise errors[0][1]
+        i, widx, exc = errors[0]
+        note = f"[{name}: worker w{widx} failed at batch {i}]"
+        if exc.args and isinstance(exc.args[0], str):
+            if note not in exc.args[0]:
+                exc.args = (f"{exc.args[0]} {note}",) + exc.args[1:]
+        elif not exc.args:
+            exc.args = (note,)
+        raise exc

@@ -72,6 +72,17 @@ class ShardPlan:
     def shard_bounds(self, shard: int) -> Tuple[int, int]:
         return self.bounds[shard], self.bounds[shard + 1]
 
+    def rehomed(self, lost: int, target: int) -> "ShardPlan":
+        """The plan after shard ``lost``'s device died and its segments
+        were re-homed onto shard ``target``'s device (DESIGN.md §12).
+        Segment ownership (``bounds``) is unchanged — only the lost slot's
+        device is replaced, so every placement lookup ``devices[k]`` keeps
+        working; the plan then has duplicate devices, like the purely
+        logical more-shards-than-devices case."""
+        devices = list(self.devices)
+        devices[lost] = devices[target]
+        return ShardPlan(self.n_segments, self.bounds, tuple(devices))
+
     def segments(self, shard: int) -> range:
         return range(self.bounds[shard], self.bounds[shard + 1])
 

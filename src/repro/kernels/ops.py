@@ -393,6 +393,73 @@ def relation_block(
     return compact(mask, col_global.astype(jnp.int32), deg)
 
 
+def _counts_vv_host(T_local: np.ndarray, nvl: int) -> np.ndarray:
+    """Host mirror of ``ref.relation_counts_vv``: shared-tet counts
+    C (B, nvl, nvl) via per-batch one-hot incidence matmul."""
+    B, NT, arity = T_local.shape
+    onehot = np.zeros((B, NT, nvl), dtype=np.int32)
+    for a in range(arity):
+        v = T_local[:, :, a]
+        bi, ti = np.nonzero(v >= 0)
+        onehot[bi, ti, v[bi, ti]] = 1
+    return np.einsum("btv,btw->bvw", onehot, onehot).astype(np.int32)
+
+
+def _counts_pairwise_host(tabX: np.ndarray, tabY: np.ndarray) -> np.ndarray:
+    """Host mirror of :func:`_counts_pairwise`: C[b, x, y] = number of
+    ``tabX[b, x]`` slots whose vertex appears in ``tabY[b, y]``."""
+    B, NX, ax = tabX.shape
+    NY = tabY.shape[1]
+    C = np.zeros((B, NX, NY), dtype=np.int32)
+    for i in range(ax):
+        xi = tabX[:, :, i]                                    # (B, NX)
+        m = np.zeros((B, NX, NY), dtype=bool)
+        for j in range(tabY.shape[2]):
+            m |= xi[:, :, None] == tabY[:, None, :, j]
+        m &= (xi >= 0)[:, :, None]
+        C += m.astype(np.int32)
+    return C
+
+
+def relation_block_host(
+    relation: str,
+    tabX: np.ndarray,
+    tabY: np.ndarray,
+    col_global: np.ndarray,
+    nvl: int,
+    deg: Optional[int] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Pure-numpy host arm of :func:`relation_block` (docs/DESIGN.md §12).
+
+    The degraded-production path when a relation's circuit breaker is
+    open: dense counts -> predicate -> compaction entirely on the host,
+    algebraically identical to the device arms and therefore bit-identical
+    (M, L) — the chaos fuzz hashes degraded runs against fault-free ones.
+    ``L`` is the TRUE per-row count (it may exceed ``deg``), so the
+    engine's :class:`RelationWidthError` overflow check still fires."""
+    k, exact = PREDICATE[relation]
+    deg = DEFAULT_DEG[relation] if deg is None else deg
+    tabX = np.asarray(tabX)
+    tabY = np.asarray(tabY)
+    colg = np.asarray(col_global).astype(np.int32)
+    if relation == "VV":
+        C = _counts_vv_host(tabX, nvl)
+        mask = (C == k) if exact else (C >= k)
+        n = min(C.shape[1], C.shape[2])
+        mask[:, np.arange(n), np.arange(n)] = False
+    else:
+        C = _counts_pairwise_host(tabX, tabY)
+        mask = (C == k) if exact else (C >= k)
+    B, R, N = mask.shape
+    M = np.full((B, R, deg), -1, dtype=np.int32)
+    L = mask.sum(axis=2).astype(np.int32)
+    for b in range(B):
+        for r in np.nonzero(L[b])[0]:
+            cols = np.flatnonzero(mask[b, r])[:deg]   # ascending local order
+            M[b, r, :len(cols)] = colg[b, cols]
+    return M, L
+
+
 def completion_gather(
     pool_M: jnp.ndarray,
     pool_L: jnp.ndarray,

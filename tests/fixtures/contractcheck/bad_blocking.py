@@ -17,5 +17,19 @@ class MiniWorker:
             time.sleep(0.01)            # line 17: sleep under the lock
             self._cond.wait()           # line 18: un-waived condvar wait
 
+    def retry_backoff(self, attempt):
+        # contract: holds-lock
+        # a backoff sleep WITHOUT the release/re-acquire + waiver of
+        # DESIGN.md §12 stalls every consumer: must be flagged
+        time.sleep(0.005 * 2 ** attempt)   # line 24: un-waived backoff
+
+    def retry_backoff_waived(self, attempt):
+        # contract: holds-lock
+        self._cond.release()
+        try:
+            time.sleep(0.005 * 2 ** attempt)   # contract: backoff-sleep
+        finally:
+            self._cond.acquire()
+
     def spin_free(self):
         time.sleep(0.01)                # lock not held: legal

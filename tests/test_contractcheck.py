@@ -30,7 +30,7 @@ SCAN_CFG = Config(exclude=())  # the fixtures are excluded by default
 FIXTURE_EXPECT = {
     "bad_shim.py": ("shim-discipline", {7, 12, 13}),
     "bad_locks.py": ("lock-discipline", {18, 21, 24}),
-    "bad_blocking.py": ("blocking-under-lock", {17, 18}),
+    "bad_blocking.py": ("blocking-under-lock", {17, 18, 24}),
     "bad_residency.py": ("device-residency", {12, 13}),
     "bad_shard.py": ("shard-purity", {16, 17}),
 }
@@ -145,10 +145,10 @@ def test_cli_baseline_suppresses_known_violations(tmp_path):
     r = _cli(target, "--no-default-exclude",
              "--baseline", str(base), "--write-baseline")
     assert r.returncode == 0, r.stdout + r.stderr
-    assert "wrote 2 fingerprint(s)" in r.stdout
+    assert "wrote 3 fingerprint(s)" in r.stdout
     r = _cli(target, "--no-default-exclude", "--baseline", str(base))
     assert r.returncode == 0, r.stdout + r.stderr
-    assert "0 violation(s) (2 suppressed by baseline)" in r.stdout
+    assert "0 violation(s) (3 suppressed by baseline)" in r.stdout
 
 
 def test_committed_baseline_is_empty():

@@ -1,0 +1,493 @@
+"""Fault injection + recovery (docs/DESIGN.md §12): deterministic
+injector schedules, bounded launch retries, the sync watchdog, the
+per-relation circuit breaker with host-arm degradation, shard re-homing
+on device loss, block-pool upload OOM recovery, relation poisoning under
+``degrade=False``, and the structured error taxonomy.
+
+The correctness bar everywhere is the repo's signature invariant: any
+eventually-survivable fault schedule yields blocks bit-identical to the
+fault-free run."""
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EngineStats, RelationEngine
+from repro.core.engine import RelationWidthError as ReexportedWidthError
+from repro.core.faults import (
+    FaultInjector,
+    FaultPolicy,
+    FaultSpec,
+    parse_fault_spec,
+)
+from repro.core.mesh import segment_mesh
+from repro.core.scheduler import run_partitioned
+from repro.core.segtables import precondition
+from repro.data.meshgen import structured_grid
+from repro.errors import (
+    LaunchError,
+    PoolUploadError,
+    RelationError,
+    RelationPoisonedError,
+    RelationWidthError,
+    SyncTimeoutError,
+)
+
+RELS = ["VV", "VT"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    mesh = structured_grid(6, 6, 5, jitter=0.2, seed=11)
+    sm = segment_mesh(mesh, capacity=24)
+    pre = precondition(sm, relations=RELS)
+    ref = RelationEngine(pre, RELS, lookahead=0, batch_max=1,
+                         cache_segments=4096, async_dispatch=False,
+                         fault_policy=FaultPolicy())
+    blocks = {(r, s): ref.get(r, s)
+              for r in RELS for s in range(sm.n_segments)}
+    return sm, pre, blocks
+
+
+def _assert_identical(eng, blocks):
+    for (r, s), (M0, L0) in blocks.items():
+        M1, L1 = eng.get(r, s)
+        assert np.array_equal(M0, M1) and np.array_equal(L0, L1), (r, s)
+
+
+def _engine(pre, injector=None, **policy_kw):
+    kw = dict(lookahead=0, batch_max=1)
+    kw.update(policy_kw.pop("engine_kw", {}))
+    return RelationEngine(
+        pre, RELS,
+        fault_policy=FaultPolicy(injector=injector, **policy_kw), **kw)
+
+
+# -- injector / spec parsing -------------------------------------------------
+
+def test_injector_is_deterministic_and_logged():
+    specs = [FaultSpec(kind="launch", relation="VV", count=2, p=0.5)]
+    logs = []
+    for _ in range(2):
+        inj = FaultInjector(specs, seed=7)
+        for s in range(20):
+            inj.launch_fault("VV", [s], 1, 0)
+        logs.append(list(inj.injected))
+    assert logs[0] == logs[1]          # seeded: replays bit-identically
+    assert 0 < len(logs[0]) <= 2       # count bounds total fires
+
+
+def test_spec_matchers_and_counts():
+    inj = FaultInjector([FaultSpec(kind="launch", relation="VT",
+                                   segment=3, attempt=1, count=1)])
+    assert inj.launch_fault("VV", [3], 1, 0) is None      # wrong relation
+    assert inj.launch_fault("VT", [0, 1], 1, 0) is None   # segment absent
+    assert inj.launch_fault("VT", [2, 3], 2, 0) is None   # wrong attempt
+    exc = inj.launch_fault("VT", [2, 3], 1, 0)
+    assert isinstance(exc, LaunchError) and exc.transient
+    assert exc.relation == "VT" and exc.attempt == 1
+    assert inj.launch_fault("VT", [2, 3], 1, 0) is None   # count exhausted
+    assert inj.injected == [("launch", "VT", (2, 3), 1, 0)]
+
+
+def test_bad_fault_kind_rejected():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(kind="meteor")
+
+
+def test_parse_fault_spec_grammar():
+    p = parse_fault_spec(
+        "launch:relation=VV,count=2,transient=0;"
+        "sync:hang_s=0.4,count=1;device-lost:shard=0;"
+        "policy:max_attempts=4,breaker_threshold=2;seed=7")
+    assert p.max_attempts == 4 and p.breaker_threshold == 2
+    kinds = [s.kind for s in p.injector.specs]
+    assert kinds == ["launch", "sync", "device-lost"]
+    assert p.injector.specs[0].transient is False
+    # sync specs without an explicit timeout auto-arm the watchdog
+    assert p.sync_timeout_s == 0.25
+
+
+def test_parse_fault_spec_rejects_malformed():
+    with pytest.raises(ValueError, match="malformed"):
+        parse_fault_spec("launch-without-colon")
+    with pytest.raises(ValueError, match="unknown policy field"):
+        parse_fault_spec("policy:warp_speed=9")
+
+
+def test_parse_empty_spec_is_default_policy():
+    p = parse_fault_spec("")
+    assert p == FaultPolicy()
+    assert p.injector is None
+
+
+# -- error taxonomy ----------------------------------------------------------
+
+def test_relation_error_structured_fields():
+    exc = LaunchError("kaput", transient=False, relation="VV", segment=4,
+                      shard=1, attempt=2)
+    assert isinstance(exc, RelationError)
+    assert exc.fields == {"relation": "VV", "segment": 4, "shard": 1,
+                          "attempt": 2}
+    s = str(exc)
+    assert "kaput" in s and "relation='VV'" in s and "attempt=2" in s
+    assert RelationError("bare").fields == {}
+    assert str(RelationError("bare")) == "bare"
+
+
+def test_width_error_folded_into_taxonomy():
+    # the one non-retryable case: still a ValueError, still importable
+    # from its historic home in core/engine.py
+    assert ReexportedWidthError is RelationWidthError
+    exc = RelationWidthError("too wide", relation="TT")
+    assert isinstance(exc, ValueError) and isinstance(exc, RelationError)
+    with pytest.raises(ValueError):
+        raise RelationWidthError("x")
+
+
+def test_sync_timeout_error_carries_timeout():
+    exc = SyncTimeoutError("late", timeout_s=0.5, relation="VV")
+    assert exc.timeout_s == 0.5 and exc.relation == "VV"
+
+
+# -- transient launch retries ------------------------------------------------
+
+def test_transient_launch_retries_bit_identical(setup):
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="launch", relation="VV", count=2)])
+    eng = _engine(pre, inj, backoff_s=0.001)
+    _assert_identical(eng, blocks)
+    assert eng.stats.retries >= 2
+    assert eng.stats.failed_launches == 0      # retried, never abandoned
+    assert len(inj.injected) == 2
+    # produced == distinct blocks still holds after the retry churn
+    assert eng.stats.segments_produced == len(blocks)
+
+
+def test_retries_deduplicate_against_concurrent_production(setup):
+    """While one thread sleeps in the retry backoff (lock released),
+    another thread producing the same segment must win; the retry
+    re-filters and never produces the segment twice."""
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="launch", relation="VV",
+                                   segment=0, attempt=1, count=1)])
+    eng = _engine(pre, inj, backoff_s=0.2)
+    produced = []
+    orig = eng._integrate
+
+    def counting_integrate(launch):
+        produced.extend((launch.relation, s) for s in launch.segments)
+        return orig(launch)
+
+    eng._integrate = counting_integrate
+    t = threading.Thread(target=lambda: eng.get("VV", 0))
+    t.start()
+    time.sleep(0.05)       # thread 1 is now inside the backoff sleep
+    M1, L1 = eng.get("VV", 0)   # thread 2 produces segment 0 meanwhile
+    t.join(timeout=10.0)
+    assert not t.is_alive()
+    M0, L0 = blocks[("VV", 0)]
+    assert np.array_equal(M0, M1) and np.array_equal(L0, L1)
+    assert produced.count(("VV", 0)) == 1      # never produced twice
+
+
+# -- circuit breaker + host-arm degradation ----------------------------------
+
+def test_breaker_opens_degrades_and_recovers(setup):
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="launch", relation="VT",
+                                   transient=False, count=3)])
+    eng = _engine(pre, inj, breaker_threshold=2, breaker_cooldown_s=0.02)
+    for s in range(sm.n_segments):
+        M0, L0 = blocks[("VT", s)]
+        M1, L1 = eng.get("VT", s)
+        assert np.array_equal(M0, M1) and np.array_equal(L0, L1), s
+        if eng.stats.breaker_trips and not eng.stats.breaker_recoveries:
+            time.sleep(0.03)   # cooldown expires -> next launch probes
+    assert eng.stats.breaker_trips >= 1
+    assert eng.stats.breaker_recoveries >= 1   # probe closed the breaker
+    assert eng.stats.degraded_launches >= 1
+    assert eng.stats.degraded_segments >= 1
+    # degraded production still lands in the per-shard partition
+    merged = eng.merged_shard_stats()
+    assert merged.segments_produced == eng.stats.segments_produced
+    assert merged.degraded_launches == eng.stats.degraded_launches
+
+
+def test_get_full_dev_many_degrades_to_host_arm(setup):
+    """With a relation's breaker OPEN, the consumer batch read serves that
+    relation from the host cache (degraded_reads) bit-identically to the
+    pooled device gather."""
+    sm, pre, blocks = setup
+    segs = list(range(min(4, sm.n_segments)))
+    base = RelationEngine(pre, RELS, fault_policy=FaultPolicy())
+    want = base.get_full_dev_many(RELS, segs)
+    # open VT's breaker via permanent failures with a LONG cooldown so the
+    # read below stays degraded
+    inj = FaultInjector([FaultSpec(kind="launch", relation="VT",
+                                   transient=False, count=2)])
+    eng = RelationEngine(pre, RELS, lookahead=0, batch_max=1,
+                         fault_policy=FaultPolicy(
+                             injector=inj, breaker_threshold=2,
+                             breaker_cooldown_s=60.0))
+    eng.get("VT", 0)
+    eng.get("VT", 1)
+    assert eng.stats.breaker_trips == 1
+    got = eng.get_full_dev_many(RELS, segs)
+    assert eng.stats.degraded_reads >= len(segs)
+    for r in RELS:
+        assert np.array_equal(np.asarray(want.M[r]), np.asarray(got.M[r]))
+        assert np.array_equal(np.asarray(want.L[r]), np.asarray(got.L[r]))
+
+
+# -- poisoning (degrade=False) -----------------------------------------------
+
+def test_permanent_failure_without_degrade_poisons_relation(setup):
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="launch", relation="VV",
+                                   transient=False, count=99)])
+    eng = _engine(pre, inj, degrade=False, breaker_threshold=1)
+    with pytest.raises(LaunchError, match="permanent launch failure"):
+        eng.get("VV", 0)
+    # every later consumer call fails fast with the cause chained — no hang
+    with pytest.raises(RelationPoisonedError,
+                       match="permanently failed") as ei:
+        eng.get("VV", 1)
+    assert isinstance(ei.value.__cause__, LaunchError)
+    with pytest.raises(RelationPoisonedError):
+        eng.request("VV", [2])
+    with pytest.raises(RelationPoisonedError):
+        eng.get_full_dev("VV", 0)
+    # other relations keep working
+    M, L = eng.get("VT", 0)
+    assert np.array_equal(M, blocks[("VT", 0)][0])
+
+
+def test_prefetch_many_racing_a_failing_launch(setup):
+    """prefetch_many hitting a transiently failing launch must retry and
+    leave the engine consistent; a permanently failing one (degrade=False)
+    must surface the error without wedging the in-flight table."""
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="launch", relation="VV", count=1)])
+    eng = _engine(pre, inj, backoff_s=0.001)
+    eng.prefetch_many({r: list(range(sm.n_segments)) for r in RELS})
+    _assert_identical(eng, blocks)
+    assert eng.stats.retries >= 1
+
+    inj2 = FaultInjector([FaultSpec(kind="launch", relation="VV",
+                                    transient=False, count=99)])
+    eng2 = _engine(pre, inj2, degrade=False, breaker_threshold=1)
+    with pytest.raises(LaunchError):
+        eng2.prefetch_many({"VV": list(range(sm.n_segments))})
+    with pytest.raises(RelationPoisonedError):
+        eng2.prefetch("VV", [0])
+    assert not eng2._inflight          # nothing wedged in flight
+    for s in range(sm.n_segments):     # the healthy relation still serves
+        M, L = eng2.get("VT", s)
+        assert np.array_equal(M, blocks[("VT", s)][0])
+
+
+# -- sync watchdog -----------------------------------------------------------
+
+def test_sync_watchdog_times_out_and_recovers(setup):
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="sync", relation="VV", hang_s=5.0,
+                                   count=1)])
+    eng = _engine(pre, inj, sync_timeout_s=0.05, sync_poll_s=0.005)
+    t0 = time.perf_counter()
+    _assert_identical(eng, blocks)
+    dt = time.perf_counter() - t0
+    assert dt < 5.0                    # the hang never ran to completion
+    assert eng.stats.sync_timeouts >= 1
+    assert eng.stats.failed_launches >= 1
+
+
+def test_sync_watchdog_slow_launch_recovers_without_failing(setup):
+    # hang shorter than timeout * max_attempts: retried waits succeed
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="sync", relation="VV", hang_s=0.08,
+                                   count=1)])
+    eng = _engine(pre, inj, sync_timeout_s=0.05, sync_poll_s=0.005)
+    _assert_identical(eng, blocks)
+    assert eng.stats.sync_timeouts >= 1
+    assert eng.stats.failed_launches == 0
+
+
+def test_hung_sync_waiters_wake_bounded(setup):
+    """Threads waiting on a hung launch's condvar must wake when the
+    watchdog fails it — bounded joins, no deadlock (the acceptance
+    criterion's no-hang bar)."""
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="sync", relation="VV", hang_s=5.0,
+                                   count=1)])
+    eng = RelationEngine(pre, RELS, lookahead=0, batch_max=4,
+                         fault_policy=FaultPolicy(
+                             injector=inj, sync_timeout_s=0.05,
+                             sync_poll_s=0.005))
+    errs = []
+
+    def read(s):
+        try:
+            M, L = eng.get("VV", s)
+            M0, L0 = blocks[("VV", s)]
+            assert np.array_equal(M0, M) and np.array_equal(L0, L)
+        except BaseException as exc:  # surfaced, not hung
+            errs.append(exc)
+
+    threads = [threading.Thread(target=read, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert not any(t.is_alive() for t in threads), "waiter deadlocked"
+    assert not errs
+    assert eng.stats.sync_timeouts >= 1
+
+
+# -- shard device loss -------------------------------------------------------
+
+def test_device_loss_rehomes_shard_bit_identical(setup):
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="device-lost", shard=0, count=1)])
+    eng = RelationEngine(pre, RELS, shards=2,
+                         fault_policy=FaultPolicy(injector=inj))
+    _assert_identical(eng, blocks)
+    assert eng.stats.shards_lost == 1
+    assert eng.stats.rehomed_segments > 0
+    assert eng.stats.retries >= 1
+    # the logical per-shard production partition survives the re-home
+    merged = eng.merged_shard_stats()
+    assert merged.segments_produced == eng.stats.segments_produced
+    # the lost shard's reads now route through the survivor's pool
+    lost_pool = eng.store._route[0]
+    assert lost_pool == eng.store._route[1]
+
+
+def test_single_shard_device_loss_degrades_to_host(setup):
+    # no surviving shard: production must fall back to the host arm
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="device-lost", count=1)])
+    eng = _engine(pre, inj)
+    _assert_identical(eng, blocks)
+    assert eng.stats.shards_lost == 0
+    assert eng.stats.degraded_launches >= 1
+
+
+# -- block-pool upload OOM ---------------------------------------------------
+
+def _pool_evicted_engine(pre, injector, **policy_kw):
+    """Engine whose 1-launch device pool evicts segment 0 after segment 1
+    is produced — so get_full_dev(0) must take the upload path."""
+    eng = RelationEngine(pre, RELS, lookahead=0, batch_max=1,
+                         dev_pool_segments=1,
+                         fault_policy=FaultPolicy(injector=injector,
+                                                  **policy_kw))
+    eng.get("VV", 0)
+    eng.get("VV", 1)
+    assert ("VV", 0) not in eng._dev_pool
+    return eng
+
+
+def test_upload_oom_clears_pool_and_retries(setup):
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="upload", relation="VV", count=1)])
+    eng = _pool_evicted_engine(pre, inj)
+    M, L = eng.get_full_dev("VV", 0)
+    assert np.array_equal(np.asarray(M)[:blocks[("VV", 0)][0].shape[0]],
+                          blocks[("VV", 0)][0])
+    # clear + one retry succeeded: pooled, not degraded
+    assert eng.stats.degraded_reads == 0
+    assert ("VV", 0) in eng._dev_pool
+
+
+def test_upload_oom_twice_serves_unpooled(setup):
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="upload", relation="VV", count=2)])
+    eng = _pool_evicted_engine(pre, inj)
+    M, L = eng.get_full_dev("VV", 0)
+    assert np.array_equal(np.asarray(M)[:blocks[("VV", 0)][0].shape[0]],
+                          blocks[("VV", 0)][0])
+    assert eng.stats.degraded_reads == 1
+    assert ("VV", 0) not in eng._dev_pool
+
+
+def test_upload_oom_raises_without_degrade(setup):
+    sm, pre, blocks = setup
+    inj = FaultInjector([FaultSpec(kind="upload", relation="VV", count=2)])
+    eng = _pool_evicted_engine(pre, inj, degrade=False)
+    with pytest.raises(PoolUploadError, match="failed twice") as ei:
+        eng.get_full_dev("VV", 0)
+    assert ei.value.segment == 0 and ei.value.relation == "VV"
+
+
+# -- stats lifecycle ---------------------------------------------------------
+
+def test_reset_stats_clears_fault_counters_exactly(setup):
+    sm, pre, blocks = setup
+    inj = FaultInjector([
+        FaultSpec(kind="launch", relation="VV", count=1),
+        FaultSpec(kind="launch", relation="VT", transient=False, count=2),
+    ])
+    eng = _engine(pre, inj, backoff_s=0.001, breaker_threshold=2)
+    _assert_identical(eng, blocks)
+    assert eng.stats.retries > 0 and eng.stats.degraded_launches > 0
+    eng.reset_stats()
+    assert eng.stats == EngineStats()      # every field, exactly zero
+    assert eng.worker_stats == {} and eng.shard_stats == {}
+    # the counters keep counting after the reset
+    d = dataclasses.asdict(eng.stats)
+    assert all(v == 0 for v in d.values())
+
+
+def test_engine_stats_has_fault_fields():
+    s = EngineStats()
+    for f in ("retries", "sync_timeouts", "failed_launches",
+              "failed_segments", "breaker_trips", "breaker_recoveries",
+              "degraded_launches", "degraded_segments", "degraded_reads",
+              "shards_lost", "rehomed_segments"):
+        assert getattr(s, f) == 0
+
+
+# -- env installation --------------------------------------------------------
+
+def test_env_spec_installs_policy(setup, monkeypatch):
+    sm, pre, blocks = setup
+    monkeypatch.setenv("REPRO_FAULT_SPEC",
+                       "launch:relation=VV,count=1;policy:max_attempts=5")
+    eng = RelationEngine(pre, RELS, lookahead=0, batch_max=1)
+    assert eng._fault_policy.max_attempts == 5
+    assert eng._injector is not None
+    _assert_identical(eng, blocks)
+    assert eng.stats.retries >= 1
+    # an explicit policy shields reference engines from the env
+    clean = RelationEngine(pre, RELS, fault_policy=FaultPolicy())
+    assert clean._injector is None
+
+
+def test_sync_timeout_kwarg_overrides_policy(setup):
+    sm, pre, blocks = setup
+    eng = RelationEngine(pre, RELS, fault_policy=FaultPolicy(),
+                         sync_timeout_s=1.5)
+    assert eng._fault_policy.sync_timeout_s == 1.5
+    _assert_identical(eng, blocks)     # watchdog armed, no faults: clean
+
+
+# -- scheduler error attribution (satellite) ---------------------------------
+
+def test_scheduler_names_worker_and_batch_in_error():
+    def consume(i, item):
+        if i == 5:
+            raise LaunchError("kaput", relation="VV", segment=5)
+        return i
+
+    with pytest.raises(LaunchError) as ei:
+        run_partitioned(list(range(16)), consume, lambda i, r: None,
+                        workers=4, name="faulty")
+    msg = str(ei.value)
+    assert "kaput" in msg                       # original text preserved
+    assert "faulty: worker w" in msg and "failed at batch 5" in msg
+    assert ei.value.__traceback__ is not None   # original traceback chained
+    assert ei.value.relation == "VV"            # structured fields intact

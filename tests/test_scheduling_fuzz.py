@@ -14,15 +14,20 @@ smaller than a launch) must
   - never deadlock: every thread joins within the test's timeout.
 """
 
+import hashlib
 import threading
+import time
 
 import numpy as np
 import pytest
 
 from repro.algorithms import fields
-from repro.algorithms.critical_points import total_order
+from repro.algorithms.critical_points import critical_points, total_order
+from repro.algorithms.discrete_gradient import discrete_gradient
+from repro.algorithms.morse_smale import morse_smale
 from repro.algorithms.persistence import persistence_pairs
 from repro.core.engine import RelationEngine
+from repro.core.faults import FaultInjector, FaultPolicy, FaultSpec
 from repro.core.mesh import segment_mesh
 from repro.core.segtables import precondition
 from repro.data.meshgen import structured_grid
@@ -36,7 +41,8 @@ def setup():
     sm = segment_mesh(mesh, capacity=24)
     pre = precondition(sm, relations=RELS)
     ref = RelationEngine(pre, RELS, lookahead=0, batch_max=1,
-                         cache_segments=4096, async_dispatch=False)
+                         cache_segments=4096, async_dispatch=False,
+                         fault_policy=FaultPolicy())
     blocks = {(r, s): ref.get(r, s)
               for r in RELS for s in range(sm.n_segments)}
     return sm, pre, blocks
@@ -219,7 +225,8 @@ def pd_setup():
     pre = precondition(sm, relations=PD_RELS)
     rank = total_order(sm.scalars)
     ref = RelationEngine(pre, PD_RELS, lookahead=0, batch_max=1,
-                         cache_segments=4096, async_dispatch=False)
+                         cache_segments=4096, async_dispatch=False,
+                         fault_policy=FaultPolicy())
     digest = persistence_pairs(ref, pre, rank).digest()
     return pre, rank, digest
 
@@ -258,3 +265,205 @@ def test_persistence_driver_fuzzed_policies(pd_setup, seed):
     for f in ("requests", "cache_hits", "cache_misses", "inflight_hits",
               "kernel_launches", "segments_produced", "evictions"):
         assert getattr(merged, f) == getattr(s, f), f
+
+# ---- chaos arm: fuzzed SURVIVABLE fault schedules (docs/DESIGN.md §12) -----
+#
+# The any-scheduling contract extended to faults: for any eventually-
+# survivable injected schedule (transient launch failures, permanent ones
+# behind the breaker's host arm, hung syncs killed by the watchdog, whole-
+# shard device loss re-homed), every driver's output stays bit-identical
+# to the fault-free run, production stays duplicate-free (counted at
+# INTEGRATION — failed launches legitimately re-dispatch), and every join
+# is bounded.
+
+CHAOS_RELS = ["VV", "VE", "VF", "VT", "FT", "TT"]
+ALGOS = ("critical_points", "discrete_gradient", "morse_smale",
+         "persistence")
+
+
+def _sha(*arrays) -> str:
+    h = hashlib.sha1()
+    for a in arrays:
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+def _driver_digest(algo, eng, pre, rank, workers=1):
+    """One full driver run -> signature over the COMPLETE output arrays."""
+    if algo == "critical_points":
+        t, _ = critical_points(eng, pre, rank, batch_segments=8,
+                               workers=workers)
+        return _sha(t)
+    if algo == "discrete_gradient":
+        g = discrete_gradient(eng, pre, rank, batch_segments=8,
+                              workers=workers)
+        return _sha(g.pair_v2e, g.pair_e2f, g.pair_f2t, g.crit_v,
+                    g.crit_e, g.crit_f, g.crit_t)
+    if algo == "morse_smale":
+        g = discrete_gradient(eng, pre, rank, batch_segments=8,
+                              workers=workers, co_prefetch=("TT",))
+        ms = morse_smale(eng, pre, g, batch_segments=8, workers=workers)
+        return _sha(ms.dest_min, ms.dest_max, ms.saddle1_ends,
+                    ms.saddle2_ends)
+    return persistence_pairs(eng, pre, rank, batch_segments=8,
+                             workers=workers).digest()
+
+
+def _record_integrations(eng):
+    """Wrap _integrate to record every block the moment it LANDS (done
+    transitions False -> True). Unlike the _dispatch wrapper above this
+    excludes failed launches, which re-dispatch by design under §12."""
+    integrated = []
+    orig = eng._integrate
+
+    def wrapped(launch):
+        fresh = not (launch.done or launch.error is not None)
+        out = orig(launch)
+        if fresh and launch.done:
+            integrated.extend((launch.relation, int(s))
+                              for s in launch.segments)
+        return out
+
+    eng._integrate = wrapped
+    return integrated
+
+
+def _chaos_policy(rng, rels, shards):
+    """A random eventually-survivable fault schedule: bounded fault counts,
+    degrade=True (host arm behind the breaker), watchdog armed against the
+    injected hangs, device loss only where a survivor exists to re-home
+    onto (or the host arm absorbs it)."""
+    specs = []
+    for _ in range(int(rng.integers(1, 4))):
+        kind = ("launch", "launch", "sync",
+                "device-lost")[int(rng.integers(4))]
+        if kind == "launch":
+            specs.append(FaultSpec(
+                kind="launch", relation=str(rng.choice(rels)),
+                transient=bool(rng.integers(2)),
+                count=int(rng.integers(1, 4))))
+        elif kind == "sync":
+            specs.append(FaultSpec(kind="sync", hang_s=0.3, count=1))
+        else:
+            specs.append(FaultSpec(kind="device-lost",
+                                   shard=int(rng.integers(shards)),
+                                   count=1))
+    injector = FaultInjector(specs, seed=int(rng.integers(1 << 30)))
+    return FaultPolicy(injector=injector, backoff_s=0.001,
+                       breaker_threshold=2, breaker_cooldown_s=0.01,
+                       sync_timeout_s=0.05, sync_poll_s=0.005)
+
+
+@pytest.fixture(scope="module")
+def chaos_setup():
+    mesh = structured_grid(7, 7, 6, jitter=0.15, seed=11,
+                           scalar_fn=fields.gaussians(4, k=4, sigma=2.5,
+                                                      scale=7.0))
+    sm = segment_mesh(mesh, capacity=24)
+    pre = precondition(sm, relations=CHAOS_RELS)
+    rank = total_order(sm.scalars)
+    ref = RelationEngine(pre, CHAOS_RELS, lookahead=0, batch_max=1,
+                         cache_segments=4096, async_dispatch=False,
+                         fault_policy=FaultPolicy())
+    digests = {a: _driver_digest(a, ref, pre, rank) for a in ALGOS}
+    return sm, pre, rank, digests
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_chaos_schedules_four_drivers_bit_identical(chaos_setup, seed):
+    """All four drivers under random survivable fault schedules crossed
+    with worker counts {1,2,4} and shard counts {1,2}: the acceptance bar
+    is bit-identity against the fault-free digests, duplicate-free
+    integration, and conserved stats."""
+    sm, pre, rank, digests = chaos_setup
+    rng = np.random.default_rng(9000 + seed)
+    injected_total = 0
+    for algo in ALGOS:
+        shards = int(rng.choice([1, 2]))
+        workers = int(rng.choice([1, 2, 4]))
+        policy = _chaos_policy(rng, CHAOS_RELS, shards)
+        eng = RelationEngine(pre, CHAOS_RELS, shards=shards,
+                             cache_segments=4096,
+                             batch_max=int(rng.choice([1, 4, 16])),
+                             lookahead=int(rng.choice([0, 3, 8])),
+                             fault_policy=policy)
+        integrated = _record_integrations(eng)
+        assert _driver_digest(algo, eng, pre, rank, workers=workers) == \
+            digests[algo], f"identical=False algo={algo} seed={seed}"
+        injected_total += len(policy.injector.injected)
+        # no block integrated twice while cached (cache never evicts here)
+        assert eng.cache.evictions == 0
+        assert len(set(integrated)) == len(integrated), \
+            f"duplicate production under faults: {algo} seed={seed}"
+        # failed launches reversed their dispatch-time counters, so the
+        # produced count still equals the distinct-block count
+        assert eng.stats.segments_produced == len(set(integrated))
+        s = eng.stats
+        assert s.cache_hits + s.cache_misses == s.requests
+    # the schedules actually fired (not vacuously survivable)
+    assert injected_total > 0
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_chaos_concurrent_consumers_bounded_joins(setup, seed):
+    """2–8 consumer threads fuzzing the full surface while faults fire:
+    blocks stay bit-identical, every thread joins within the bound (no
+    waiter is left behind on a failed or hung launch), and integration
+    stays duplicate-free."""
+    sm, pre, blocks = setup
+    ns = sm.n_segments
+    rng = np.random.default_rng(4242 + seed)
+    shards = int(rng.choice([1, 2]))
+    policy = _chaos_policy(rng, RELS, shards)
+    eng = RelationEngine(pre, RELS, shards=shards, cache_segments=4096,
+                         batch_max=int(rng.choice([1, 4, 16])),
+                         lookahead=int(rng.choice([0, 3, 8])),
+                         fault_policy=policy)
+    integrated = _record_integrations(eng)
+    n_threads = int(rng.choice([2, 3, 4, 8]))
+    errors = []
+
+    def worker(widx):
+        try:
+            with eng.worker_scope(f"w{widx}"):
+                wrng = np.random.default_rng(104729 * seed + widx)
+                _fuzz_ops(eng, blocks, ns, wrng, iters=20)
+        except BaseException as e:   # pragma: no cover - failure path
+            errors.append((widx, e))
+
+    threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+               for w in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+        assert not t.is_alive(), \
+            f"deadlock: consumer thread {t.name} still running under chaos"
+    assert not errors, errors[0]
+    assert eng.cache.evictions == 0
+    assert len(set(integrated)) == len(integrated)
+    assert eng.stats.segments_produced == len(set(integrated))
+    s = eng.stats
+    assert s.cache_hits + s.cache_misses == s.requests
+
+
+def test_chaos_hung_sync_terminates_via_watchdog(chaos_setup):
+    """A launch hung far past the test budget must terminate through the
+    watchdog's SyncTimeoutError -> syncer takeover -> re-dispatch path,
+    with the driver output still bit-identical (the §12 no-hang bar)."""
+    sm, pre, rank, digests = chaos_setup
+    inj = FaultInjector([FaultSpec(kind="sync", hang_s=120.0, count=1)])
+    eng = RelationEngine(pre, CHAOS_RELS,
+                         fault_policy=FaultPolicy(injector=inj,
+                                                  sync_timeout_s=0.05,
+                                                  sync_poll_s=0.005))
+    t0 = time.perf_counter()
+    d = _driver_digest("critical_points", eng, pre, rank, workers=2)
+    dt = time.perf_counter() - t0
+    assert d == digests["critical_points"]
+    assert dt < 60.0, f"hung sync not reclaimed ({dt:.1f}s)"
+    assert eng.stats.sync_timeouts >= 1
+    assert eng.stats.failed_launches >= 1
