@@ -76,13 +76,10 @@ def ds_memory_bytes(ds) -> int:
             if id(a) not in seen:
                 seen.add(id(a))
                 tables += int(np.prod(a.shape)) * a.dtype.itemsize
-    cache = 0
-    for (M, L, n) in eng.cache._store.values():
-        cache += int(np.prod(M.shape)) * 4 + int(np.prod(L.shape)) * 4
-    # device block pool: still-resident launch arrays pinned for consumers
-    pool = sum(int(np.prod(M.shape)) * 4 + int(np.prod(L.shape)) * 4
-               for (M, L, _) in eng._dev_pool._arrays.values())
-    return tables + cache + pool
+    # host cache + still-resident device launch arrays, via the engine's
+    # public accounting (contractcheck's store-encapsulation rule forbids
+    # peeking at the LRU internals from here)
+    return tables + eng.cache_nbytes()
 
 
 def peak_rss_mb() -> float:

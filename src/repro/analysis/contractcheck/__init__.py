@@ -1,6 +1,6 @@
 """contractcheck — AST-based enforcement of the engine's prose contracts.
 
-Five composable checkers walk ``src/``, ``tests/`` and ``benchmarks/`` and
+Six composable checkers walk ``src/``, ``tests/`` and ``benchmarks/`` and
 turn the invariants of docs/DESIGN.md §3/§8/§9 and ROADMAP's "Constraints &
 contracts" into errors (docs/DESIGN.md §11 maps each id to its clause):
 
@@ -23,6 +23,11 @@ checker id             contract
                        materialize traced values on the host (§6).
 ``shard-purity``       shard-parameterized helpers thread the explicit
                        shard index into every per-shard container (§9).
+``store-encapsulation``block-store LRU internals (``._store``,
+                       ``._arrays``) are only touched inside
+                       ``core/blockstore.py`` and its white-box test;
+                       everyone else uses the engine's public
+                       ``clear_cache()`` / ``cache_nbytes()``.
 =====================  ====================================================
 
 Library use::
@@ -42,7 +47,7 @@ from typing import Iterable, List, Optional, Sequence
 from .base import (Checker, Config, ModuleContext, Violation,
                    iter_python_files)
 from .locks import BlockingUnderLock, LockDiscipline
-from .residency import DeviceResidency
+from .residency import DeviceResidency, StoreEncapsulation
 from .shards import ShardPurity
 from .shim import ShimDiscipline
 
@@ -53,7 +58,7 @@ __all__ = [
 
 #: default checker set, in documentation order
 CHECKERS = (ShimDiscipline(), LockDiscipline(), BlockingUnderLock(),
-            DeviceResidency(), ShardPurity())
+            DeviceResidency(), ShardPurity(), StoreEncapsulation())
 
 
 def run_checks(paths: Iterable, config: Optional[Config] = None,

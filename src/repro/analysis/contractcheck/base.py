@@ -131,6 +131,14 @@ class Config:
     np_conversions: frozenset = frozenset({
         "asarray", "array", "ascontiguousarray", "copy"})
 
+    # store encapsulation: the only modules allowed to touch the LRU's
+    # backing `._store` (and the pool's `._arrays`) directly — the store
+    # itself plus its white-box unit test. Everyone else goes through the
+    # public surface (engine `clear_cache()`/`cache_nbytes()`).
+    store_allowed: Tuple[str, ...] = (
+        "core/blockstore.py", "tests/test_blockstore.py")
+    store_attrs: frozenset = frozenset({"_store", "_arrays"})
+
     # path substrings excluded from walks (the known-bad fixtures)
     exclude: Tuple[str, ...] = ("tests/fixtures/contractcheck",)
 

@@ -20,7 +20,7 @@ import ast
 from typing import List
 
 from .base import Checker, Config, ModuleContext, Violation, dotted_name, \
-    iter_functions
+    iter_functions, path_matches
 
 HINT = ("keep the value on device (jnp ops / lax primitives); host "
         "materialization belongs in the caller after the batch is released")
@@ -61,3 +61,35 @@ class DeviceResidency(Checker):
                 and not isinstance(node.args[0], ast.Constant)):
             return "'float(...)' of a (potentially traced) value"
         return None
+
+
+STORE_HINT = ("use the public surface instead: RelationEngine.clear_cache()"
+              " / cache_nbytes(), or BlockStore.shard_occupancy()")
+
+
+class StoreEncapsulation(Checker):
+    """Checker 6 — store encapsulation.
+
+    The block store's LRU internals (``._store`` OrderedDicts, the pool's
+    ``._arrays`` backing map) are mutable state guarded by the engine lock;
+    external reads/clears bypass the lock AND the store's occupancy and
+    eviction accounting (the old benchmark peeks mutated cache state with
+    no lock held at all). Only ``core/blockstore.py`` itself and its
+    white-box unit test may touch these attributes; everyone else uses the
+    engine's public ``clear_cache()`` / ``cache_nbytes()``.
+    """
+
+    id = "store-encapsulation"
+
+    def check(self, ctx: ModuleContext, cfg: Config) -> List[Violation]:
+        if path_matches(ctx.path, cfg.store_allowed):
+            return []
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if (isinstance(node, ast.Attribute)
+                    and node.attr in cfg.store_attrs):
+                out.append(self.violation(
+                    ctx, node,
+                    f"access to block-store internal '.{node.attr}' outside "
+                    f"core/blockstore.py", STORE_HINT))
+        return out

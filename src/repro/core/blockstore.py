@@ -74,9 +74,11 @@ class _LRUCore:
 class SegmentCache:
     """Host LRU over per-segment blocks ``(relation, segment) -> (M, L, n)``.
 
-    ``_store`` is exposed (it is the LRU's backing OrderedDict) because the
-    benchmarks peek at it for memory accounting and clear it to model cold
-    caches.
+    External code must not touch the backing ``_store`` directly (the
+    ``store-encapsulation`` contractcheck rule enforces this): memory
+    accounting goes through :meth:`nbytes` and cold-cache modelling through
+    :meth:`clear`, both of which the engine re-exports lock-respectingly as
+    ``RelationEngine.cache_nbytes()`` / ``clear_cache()``.
     """
 
     def __init__(self, capacity: int):
@@ -98,6 +100,21 @@ class SegmentCache:
     def put(self, key, value) -> None:
         # contract: holds-lock
         self._core.put(key, value)
+
+    def clear(self) -> int:
+        # contract: holds-lock
+        """Drop every cached block. Returns the number of entries dropped."""
+        n = len(self._store)
+        self._store.clear()
+        return n
+
+    def nbytes(self) -> int:
+        """Total bytes held by cached ``(M, L, n)`` blocks."""
+        total = 0
+        for (M, L, _) in self._store.values():
+            total += int(M.size) * M.dtype.itemsize
+            total += int(L.size) * L.dtype.itemsize
+        return total
 
     def __contains__(self, key) -> bool:
         return key in self._core
@@ -250,6 +267,20 @@ class BlockStore:
         for p in self.pools:
             merged.update(p._arrays)
         return merged
+
+    def clear_cache(self) -> int:
+        # contract: holds-lock
+        """Drop the host cache and every shard's device pool in place.
+        Returns the total number of entries dropped (cache + pools)."""
+        dropped = self.cache.clear()
+        for p in self.pools:
+            dropped += p.clear()
+        return dropped
+
+    def cache_nbytes(self) -> int:
+        """Bytes retained across the host cache and all device pools."""
+        return self.cache.nbytes() + sum(
+            occ["bytes"] for occ in self.shard_occupancy())
 
     def shard_occupancy(self) -> List[Dict[str, int]]:
         """Per-shard device-pool occupancy: backing arrays, entries, bytes.

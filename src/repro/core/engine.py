@@ -386,10 +386,10 @@ class RelationEngine(StatsHost):
         relations: Sequence[str],
         backend: str = "xla",
         lookahead: int = 8,
-        batch_max: int = 64,
+        batch_max: Optional[int] = None,
         cache_segments: int = 512,
-        block_x: int = 256,
-        block_y: int = 256,
+        block_x: Optional[int] = None,
+        block_y: Optional[int] = None,
         deg: Optional[Dict[str, int]] = None,
         async_dispatch: bool = True,
         inflight_max: int = 8,
@@ -398,6 +398,8 @@ class RelationEngine(StatsHost):
         shard_plan: Optional[ShardPlan] = None,
         fault_policy: Optional[FaultPolicy] = None,
         sync_timeout_s: Optional[float] = None,
+        tune: str = "auto",
+        assembly: str = "sparse",
     ):
         if pre.tables is None:
             raise ValueError("precondition(..., build_tables=True) required")
@@ -423,9 +425,24 @@ class RelationEngine(StatsHost):
         self.tables = pre.tables
         self.backend = backend
         self.lookahead = lookahead
-        self.batch_max = batch_max
-        self.block_x = block_x
-        self.block_y = block_y
+        # Kernel-parameter resolution (docs/DESIGN.md §4): explicit argument
+        # > tuned table entry (tune="auto" or a path) > built-in default.
+        # tune="off" skips the table so today's defaults are reproduced
+        # bit-for-bit; a missing/corrupt table silently falls back, so
+        # construction never depends on on-disk tuning state.
+        tuned = self._load_tuned_config(tune, backend,
+                                        pre.smesh.n_segments)
+        self.batch_max = int(batch_max if batch_max is not None
+                             else tuned.get("batch_max", 64))
+        self.block_x = int(block_x if block_x is not None
+                           else tuned.get("block_x", 256))
+        self.block_y = int(block_y if block_y is not None
+                           else tuned.get("block_y", 256))
+        vvb = tuned.get("vv_block")
+        self.vv_block: Optional[int] = int(vvb) if vvb else None
+        self.bucket_floor = max(1, int(tuned.get("bucket_floor", 1)))
+        self.assembly = assembly
+        batch_max = self.batch_max
         self.async_dispatch = async_dispatch
         self.inflight_max = max(1, inflight_max)
         self.relations = tuple(r for r in relations if r in OFFLOADED_RELATIONS)
@@ -543,6 +560,25 @@ class RelationEngine(StatsHost):
             tabs["LF_global"] = put(t.LF_global)
         return tabs
 
+    @staticmethod
+    def _load_tuned_config(tune: str, backend: str, n_segments: int) -> Dict:
+        """Resolve the autotuned kernel-parameter dict for this engine.
+
+        ``tune="off"`` returns ``{}`` (built-in defaults); ``"auto"`` looks
+        up the default on-disk table (``launch/autotune.py``); any other
+        string is a path to an explicit table. Lookup failures of any kind —
+        missing file, stale version, corrupt JSON — resolve to ``{}`` so
+        construction never fails because of tuning state."""
+        if tune == "off":
+            return {}
+        try:
+            from ..launch import autotune
+            cfg = autotune.lookup(backend, n_segments,
+                                  path=None if tune == "auto" else tune)
+            return cfg.to_dict() if cfg is not None else {}
+        except Exception:
+            return {}
+
     # -- consumer-side API --------------------------------------------------
 
     @contextlib.contextmanager
@@ -598,6 +634,29 @@ class RelationEngine(StatsHost):
                 q.append(s)
                 qs.add(s)
         self._bump(t_enqueue=time.perf_counter() - t0)
+
+    def clear_cache(self) -> int:
+        """Drop every retained block — host segment cache and all shard
+        device pools — under the engine lock. Benchmarks use this to model
+        cold caches (the old ``eng.cache._store.clear()`` peek, now a
+        contractcheck violation).
+
+        In-flight launches are retired (synced and integrated) first so a
+        launch dispatched before the clear cannot resurrect dropped blocks
+        afterwards; the wait lands in ``stats.t_sync`` as usual. Returns the
+        total number of entries dropped."""
+        with self._consumer_entry("clear_cache"):
+            while self._flights:
+                self._sync(self._flights.popleft())
+            return self.store.clear_cache()
+
+    def cache_nbytes(self) -> int:
+        """Bytes retained across the host segment cache and every shard's
+        device pool (shard-aware via ``BlockStore.shard_occupancy()``),
+        under the engine lock. This is the public replacement for the
+        benchmarks' memory-accounting peek at ``cache._store``."""
+        with self._consumer_entry("cache_nbytes"):
+            return self.store.cache_nbytes()
 
     def get(self, relation: str, segment: int) -> Tuple[np.ndarray, np.ndarray]:
         """Fetch the (M, L) relation block for one segment.
@@ -1521,7 +1580,7 @@ class RelationEngine(StatsHost):
         t0 = time.perf_counter()
         # pad the launch to a power-of-two bucket (duplicating the last
         # segment) so jit sees O(log batch_max) shapes, not one per drain
-        b_pad = ops.bucket_rows(len(batch))
+        b_pad = ops.bucket_rows(len(batch), self.bucket_floor)
         padded = batch + [batch[-1]] * (b_pad - len(batch))
         lo = self.shard_plan.bounds[shard]
         segs = jnp.asarray(np.asarray(padded, dtype=np.int32) - lo)
@@ -1543,7 +1602,8 @@ class RelationEngine(StatsHost):
         t1 = time.perf_counter()
         M, L = ops.relation_block(
             relation, tabX, tabY, colg, nvl, deg=deg, backend=self.backend,
-            block_x=self.block_x, block_y=self.block_y)
+            block_x=self.block_x, block_y=self.block_y,
+            vv_block=self.vv_block, assembly=self.assembly)
         dt = time.perf_counter() - t1
         self._bump(t_kernel=dt, kernel_launches=1,
                    segments_produced=len(batch))

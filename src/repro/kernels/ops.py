@@ -3,15 +3,21 @@ relation predicates, and compaction of dense count blocks into the paper's
 padded ``(M, L)`` relation arrays.
 
 Backends:
-  - ``"pallas"``            : pl.pallas_call on a real TPU
-  - ``"pallas_interpret"``  : same kernel executed in interpreter mode (CPU
-                              correctness validation)
+  - ``"pallas"``            : pl.pallas_call on a real TPU — sparse entry
+                              assembly emitting (M, L) directly, with a
+                              one-hot counts fallback for EE/FF and
+                              oversize keys (docs/DESIGN.md §4)
+  - ``"pallas_interpret"``  : same kernels executed in interpreter mode
+                              (CPU correctness validation)
   - ``"xla"``               : one fused jit per launch, specialized per
-                              relation with sparse entry assembly
-                              (docs/DESIGN.md §4) — bit-identical to the
-                              counts oracle and the Pallas kernels; the
-                              fast path on CPU, used by the benchmarks in
-                              this container
+                              relation with the same sparse entry assembly
+                              — bit-identical to the counts oracle and the
+                              Pallas kernels; the fast path on CPU, used by
+                              the benchmarks in this container
+
+Both backend families fork sparse/dense under the shared guards in
+:func:`sparse_arm_ok`; ``assembly="dense"`` forces the legacy dense
+epilogue for the benchmark A/B.
 """
 
 from __future__ import annotations
@@ -27,6 +33,7 @@ from . import ref
 from .segment_relations import (
     relation_counts_meet_pallas,
     relation_counts_vv_pallas,
+    relation_entries_pallas,
 )
 
 # Maximum relation-list width (the paper's preallocated relation-array width).
@@ -128,11 +135,16 @@ def _compact_impl(mask, col_global, deg):
     B, R, N = mask.shape
     iota = jnp.arange(N, dtype=jnp.int32)
     scores = jnp.where(mask, N - iota, 0).astype(jnp.int32)
-    vals, idx = jax.lax.top_k(scores, deg)            # (B, R, deg)
+    # top_k caps k at the column count; narrow tables (prime-sized tails)
+    # can have N < deg, in which case M right-pads with -1 columns
+    k = min(deg, N)
+    vals, idx = jax.lax.top_k(scores, k)              # (B, R, k)
     valid = vals > 0
     gathered = jnp.take_along_axis(
         jnp.broadcast_to(col_global[:, None, :], (B, R, N)), idx, axis=2)
     M = jnp.where(valid, gathered, -1)
+    if k < deg:
+        M = jnp.pad(M, ((0, 0), (0, 0), (0, deg - k)), constant_values=-1)
     L = mask.sum(axis=2).astype(jnp.int32)
     return M, L
 
@@ -322,35 +334,52 @@ def _counts_pairwise(tabX: jnp.ndarray, tabY: jnp.ndarray) -> jnp.ndarray:
     return C
 
 
-@functools.partial(jax.jit, static_argnames=("relation", "nvl", "deg"))
-def _relation_block_fused(relation, tabX, tabY, col_global, nvl, deg):
+def sparse_arm_ok(relation: str, tabX, tabY, nvl: int) -> bool:
+    """True when ``relation`` has a sparse entry-assembly arm AND its entry
+    keys fit int32. Shared by the xla fused dispatch and the Pallas entry
+    kernels so both backends take the sparse/dense fork under identical
+    conditions: EE/FF (count predicates, not membership) and oversize-key
+    meshes fall back to the pairwise/one-hot dense arm on BOTH."""
+    if relation == "VV":
+        return nvl * nvl + nvl < 2 ** 31
+    if relation in ("VE", "VF", "VT"):
+        NY = tabY.shape[1]
+        return nvl * NY + NY < 2 ** 31
+    if relation == "TT":
+        NT = tabX.shape[1]
+        return nvl ** 3 < 2 ** 31 and NT * NT + NT < 2 ** 31
+    if relation in ("EF", "ET", "FT"):
+        NX, NY = tabX.shape[1], tabY.shape[1]
+        ax = tabX.shape[2]
+        return nvl ** ax * 2 < 2 ** 31 and NX * NY + NY < 2 ** 31
+    return False
+
+
+@functools.partial(
+    jax.jit, static_argnames=("relation", "nvl", "deg", "assembly"))
+def _relation_block_fused(relation, tabX, tabY, col_global, nvl, deg,
+                          assembly="sparse"):
     """counts/entries -> (M, L) fused into ONE jitted computation, so the
     engine pays a single dispatch per launch and the whole epilogue is one
     in-flight future (async producer contract, see core/engine.py).
 
-    Per-relation specialization (xla backend only; the Pallas backends keep
-    the MXU one-hot counts kernels): the driver hot-path relations
-    (VV/VE/VF/VT/TT) are assembled sparsely by entry inversion / sort join
-    — O(table entries) instead of the O(rows·cols) dense mask + top_k
-    compaction — and the remaining relations count shared vertices by
+    Per-relation specialization: the driver hot-path relations
+    (VV/VE/VF/VT/TT/EF/ET/FT) are assembled sparsely by entry inversion /
+    sort join — O(table entries) instead of the O(rows·cols) dense mask +
+    top_k compaction — and the remaining relations count shared vertices by
     direct slot comparison. All arms are algebraically identical to the
-    one-hot counts + predicate + compaction, hence bit-identical (M, L)."""
+    one-hot counts + predicate + compaction, hence bit-identical (M, L).
+    ``assembly="dense"`` forces the dense tail for every relation — the
+    benchmark A/B arm (bench_kernel_params.py), never the engine default."""
     colg = col_global.astype(jnp.int32)
-    if relation == "VV" and nvl * nvl + nvl < 2 ** 31:
-        return _block_vv(tabX, colg, nvl, deg)
-    if relation in ("VE", "VF", "VT"):
-        NY = tabY.shape[1]
-        if nvl * NY + NY < 2 ** 31:
+    if assembly == "sparse" and sparse_arm_ok(relation, tabX, tabY, nvl):
+        if relation == "VV":
+            return _block_vv(tabX, colg, nvl, deg)
+        if relation in ("VE", "VF", "VT"):
             return _block_member_v(tabY, colg, nvl, deg)
-    if relation == "TT":
-        NT = tabX.shape[1]
-        if nvl ** 3 < 2 ** 31 and NT * NT + NT < 2 ** 31:
+        if relation == "TT":
             return _block_tt(tabX, colg, nvl, deg)
-    if relation in ("EF", "ET", "FT"):
-        NX, NY = tabX.shape[1], tabY.shape[1]
-        ax = tabX.shape[2]
-        if nvl ** ax * 2 < 2 ** 31 and NX * NY + NY < 2 ** 31:
-            return _block_sub_join(tabX, tabY, colg, nvl, deg)
+        return _block_sub_join(tabX, tabY, colg, nvl, deg)
     k, exact = PREDICATE[relation]
     if relation == "VV":
         C = ref.relation_counts_vv(tabX, nvl)
@@ -371,20 +400,33 @@ def relation_block(
     backend: str = "xla",
     block_x: int = 256,
     block_y: int = 256,
+    vv_block: Optional[int] = None,
+    assembly: str = "sparse",
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Full pipeline: counts -> predicate -> compaction.
+    """Full pipeline: entries (or counts -> predicate) -> (M, L).
 
     For VV, pass ``tabX = tabY = T_local`` and ``col_global = LV_global``;
     rows/cols are local vertices. Returns (M, L) with global ids. The xla
     backend runs the whole pipeline as one fused jit dispatch; the pallas
-    backends keep the counts kernel separate from the jitted epilogue."""
+    backends emit (M, L) directly from the sparse entry-assembly kernels
+    (``relation_entries_pallas``) under the SAME per-relation guards as the
+    xla arm, falling back to the one-hot counts kernel + jitted epilogue
+    for EE/FF and oversize keys. ``assembly="dense"`` forces the old dense
+    epilogue everywhere (the benchmark A/B arm); ``vv_block`` overrides the
+    VV counts-kernel block (defaults to ``block_x``) — both are autotune
+    surface (launch/autotune.py)."""
     k, exact = PREDICATE[relation]
     deg = DEFAULT_DEG[relation] if deg is None else deg
     if backend == "xla":
         return _relation_block_fused(relation, tabX, tabY, col_global,
-                                     nvl, deg)
+                                     nvl, deg, assembly)
+    if assembly == "sparse" and sparse_arm_ok(relation, tabX, tabY, nvl):
+        return relation_entries_pallas(
+            relation, tabX, tabY, col_global, nvl=nvl, deg=deg,
+            interpret=backend == "pallas_interpret")
     if relation == "VV":
-        C = counts_vv(tabX, nvl, backend=backend, block=block_x)
+        C = counts_vv(tabX, nvl, backend=backend,
+                      block=vv_block if vv_block else block_x)
         mask = predicate(C, k, exact, exclude_diag=True)
     else:
         C = counts_meet(tabX, tabY, nvl, backend=backend,

@@ -309,6 +309,18 @@ def roofline_terms(costs: HloCosts) -> Dict[str, float]:
     }
 
 
+def kernel_roofline(flops: float, hbm_bytes: float,
+                    ici_bytes: float = 0.0) -> Dict[str, float]:
+    """Roofline terms for a single relation kernel launch, from analytic
+    (not HLO-parsed) cost estimates. This is the scoring function behind
+    ``launch/autotune.py``'s candidate ranking: the autotuner does not need
+    HLO text, only the launch's flop/byte volumes implied by a candidate
+    (block, batch) configuration."""
+    return roofline_terms(HloCosts(flops=float(flops),
+                                   hbm_bytes=float(hbm_bytes),
+                                   ici_bytes=float(ici_bytes)))
+
+
 def model_flops(cfg, shape) -> float:
     """Per-device MODEL_FLOPS: 6·N·D train, 2·N·D inference (active params
     for MoE), D = tokens processed per device per step."""

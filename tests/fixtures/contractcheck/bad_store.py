@@ -1,0 +1,20 @@
+"""Known-bad fixture: block-store LRU internals touched outside
+core/blockstore.py (store-encapsulation only).
+
+Excluded from the default contractcheck scan; tests/test_contractcheck.py
+scans it explicitly and asserts the exact violations below.
+"""
+
+
+def cold_cache(eng):
+    eng.cache._store.clear()            # line 10: the old benchmark peek
+
+
+def memory_bytes(eng):
+    host = sum(m.nbytes for (m, _, _) in eng.cache._store.values())  # line 14
+    dev = len(eng._dev_pool._arrays)    # line 15: pool backing map
+    return host + dev
+
+
+def memory_bytes_public(eng):           # the sanctioned replacement: legal
+    return eng.cache_nbytes()

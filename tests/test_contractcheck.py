@@ -33,6 +33,7 @@ FIXTURE_EXPECT = {
     "bad_blocking.py": ("blocking-under-lock", {17, 18, 24}),
     "bad_residency.py": ("device-residency", {12, 13}),
     "bad_shard.py": ("shard-purity", {16, 17}),
+    "bad_store.py": ("store-encapsulation", {10, 14, 15}),
 }
 
 

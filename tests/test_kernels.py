@@ -55,6 +55,23 @@ def test_vv_kernel_matches_ref(B, NT, nvl):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("n", [1, 7, 127])
+def test_prime_sized_tables_tail_block(n):
+    """`_pick_block` grids over the 128-padded table; with prime n the tail
+    block over-covers and the padding rows must be explicitly masked out
+    (ISSUE 10 regression)."""
+    rng = np.random.default_rng(n)
+    nvl = 128
+    tt = _rand_tables(rng, 2, n, 4, nvl, fill=1.0)
+    want = ops.counts_vv(tt, nvl, backend="xla")
+    got = ops.counts_vv(tt, nvl, backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    tx = _rand_tables(rng, 2, n, 2, nvl, fill=1.0)
+    want = ops.counts_meet(tx, tt, nvl, backend="xla")
+    got = ops.counts_meet(tx, tt, nvl, backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_compact_orders_and_counts():
     mask = jnp.asarray(np.array([[[True, False, True, True],
                                   [False, False, False, False]]]))
